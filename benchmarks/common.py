@@ -1,0 +1,52 @@
+"""Shared benchmark utilities: workloads, timing, CSV records.
+
+Synthetic graphs stand in for the paper's SNAP/LAW datasets (offline
+container; see DESIGN.md §6). Sizes are CPU-budgeted; relative claims
+(speedups, scaling curves, decomposition) are what we reproduce.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import BatchPathEngine, EngineConfig
+from repro.core import generators
+
+RESULTS: list[dict] = []
+
+
+def record(name: str, us_per_call: float, derived: str = "") -> None:
+    RESULTS.append({"name": name, "us_per_call": us_per_call,
+                    "derived": derived})
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def default_graph(scale: float = 1.0, seed: int = 0):
+    n = int(20_000 * scale)
+    return generators.community(n, n_comm=max(4, n // 2500), avg_deg=6.0,
+                                seed=seed)
+
+
+def time_mode(engine: BatchPathEngine, queries, mode: str, repeats: int = 1,
+              warmup: bool = True):
+    if warmup:  # first call pays jit compiles; time the warm path
+        engine.process(queries, mode=mode)
+    best = None
+    stats = None
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        res = engine.process(queries, mode=mode)
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+        stats = res.stats
+    return best, stats
+
+
+def measured_similarity(engine: BatchPathEngine, queries) -> float:
+    from repro.core import build_index
+    from repro.core.similarity import similarity_matrix
+    index = build_index(engine.dg, queries)
+    mu = similarity_matrix(index)
+    q = len(queries)
+    return float((mu.sum() - q) / max(q * (q - 1), 1))

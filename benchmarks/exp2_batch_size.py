@@ -1,0 +1,31 @@
+"""Exp-2 (Fig 8): processing time vs batch size |Q|.
+
+Paper claim: BatchEnum(+) outperforms the baselines at every |Q| and the
+gap widens with |Q| (more sharing opportunities in bigger batches).
+"""
+from __future__ import annotations
+
+from repro.core import BatchPathEngine, EngineConfig
+from repro.core import generators
+from .common import default_graph, record, time_mode
+
+
+def main(scale: float = 1.0) -> list[dict]:
+    g = default_graph(scale, seed=1)
+    eng = BatchPathEngine(g, EngineConfig(min_cap=128))
+    rows = []
+    for nq in [10, 20, 40, 80]:
+        qs = generators.similar_queries(g, nq, similarity=0.6,
+                                        k_range=(5, 5), seed=nq)
+        t_basic, _ = time_mode(eng, qs, "basic")
+        t_batch, sb = time_mode(eng, qs, "batch")
+        rows.append(dict(n_queries=nq, t_basic=t_basic, t_batch=t_batch,
+                         speedup=t_basic / t_batch))
+        record(f"exp2_q{nq}_basic", t_basic * 1e6, "")
+        record(f"exp2_q{nq}_batch", t_batch * 1e6,
+               f"speedup={t_basic / t_batch:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Exp-4 (Fig 10): impact of the clustering threshold gamma.
+
+Paper claim: as gamma decreases the time first drops (more sharing), then
+rises past a turning point (over-merged clusters share too little).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import BatchPathEngine, EngineConfig
+from repro.core import generators
+from .common import default_graph, record, time_mode
+
+
+def main(scale: float = 1.0) -> list[dict]:
+    g = default_graph(scale, seed=4)
+    qs = generators.similar_queries(g, 32, similarity=0.8, k_range=(5, 5),
+                                    seed=5)
+    rows = []
+    for gamma in [0.1, 0.3, 0.5, 0.7, 0.9, 1.0]:
+        eng = BatchPathEngine(g, EngineConfig(min_cap=128, gamma=gamma))
+        t, st = time_mode(eng, qs, "batch")
+        rows.append(dict(gamma=gamma, t=t, n_clusters=st["n_clusters"],
+                         n_shared=st.get("n_shared", 0)))
+        record(f"exp4_gamma{gamma:.1f}", t * 1e6,
+               f"clusters={st['n_clusters']};shared={st.get('n_shared', 0)}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Exp-5 (Fig 11): scalability with graph size (20%..100% samples).
+
+Paper claim: all engines grow with graph size; BatchEnum(+) stays fastest.
+"""
+from __future__ import annotations
+
+from repro.core import BatchPathEngine, EngineConfig
+from repro.core import generators
+from .common import default_graph, record, time_mode
+
+
+def main(scale: float = 1.0) -> list[dict]:
+    rows = []
+    for frac in [0.2, 0.4, 0.6, 0.8, 1.0]:
+        g = default_graph(scale * frac, seed=6)
+        eng = BatchPathEngine(g, EngineConfig(min_cap=128))
+        qs = generators.similar_queries(g, 20, similarity=0.6,
+                                        k_range=(5, 5), seed=7)
+        t_basic, _ = time_mode(eng, qs, "basic")
+        t_batch, _ = time_mode(eng, qs, "batch")
+        rows.append(dict(frac=frac, n=g.n, m=g.m, t_basic=t_basic,
+                         t_batch=t_batch))
+        record(f"exp5_frac{frac:.1f}_basic", t_basic * 1e6, f"n={g.n};m={g.m}")
+        record(f"exp5_frac{frac:.1f}_batch", t_batch * 1e6,
+               f"speedup={t_basic / t_batch:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Kernel micro-benchmarks: jnp reference path timings on CPU (the Pallas
+paths are TPU-target; interpret mode is not a performance proxy, so we
+time the jnp twins that the engine actually executes here) plus working-set
+documentation per kernel BlockSpec.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import record
+
+
+def _bench(fn, *args, repeats=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    best = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.tree.leaves(out)[0].block_until_ready()
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+    return best
+
+
+def main(scale: float = 1.0) -> None:
+    rng = np.random.default_rng(0)
+
+    # MS-BFS hop: 200k vertices, 1.6M edges, 128 sources
+    from repro.core.msbfs import msbfs_hop
+    n, m, S = int(200_000 * scale), int(1_600_000 * scale), 128
+    esrc = jnp.asarray(rng.integers(0, n, m).astype(np.int32))
+    edst = jnp.asarray(np.sort(rng.integers(0, n, m).astype(np.int32)))
+    frontier = jnp.asarray((rng.random((n + 1, S)) < 0.05).astype(np.int8))
+    f = jax.jit(lambda fr: msbfs_hop(fr, esrc, edst, n))
+    dt = _bench(f, frontier)
+    record("kernel_msbfs_hop_jnp", dt * 1e6,
+           f"edges={m};sources={S};GTEPS={m * S / dt / 1e9:.2f}")
+
+    # pairwise popcount (similarity): 128 queries x 200k vertices
+    from repro.kernels.pairwise_popcount.ref import intersections_bool_ref
+    g = jnp.asarray(rng.random((128, n)) < 0.1)
+    f = jax.jit(intersections_bool_ref)
+    dt = _bench(f, g)
+    record("kernel_similarity_jnp", dt * 1e6, f"Q=128;V={n}")
+
+    # path join overlap: 4096 x 4096 pairs, L=6
+    from repro.kernels.path_join.ref import path_overlap_ref
+    A = jnp.asarray(rng.integers(0, 1000, (4096, 6)).astype(np.int32))
+    B = jnp.asarray(rng.integers(0, 1000, (4096, 6)).astype(np.int32))
+    f = jax.jit(path_overlap_ref)
+    dt = _bench(f, A, B)
+    record("kernel_path_join_jnp", dt * 1e6,
+           f"pairs={4096 * 4096};Mpairs_s={4096 * 4096 / dt / 1e6:.1f}")
+
+    # ELL SpMM: 100k x deg16 x 128 feats
+    from repro.kernels.ell_spmm.ref import ell_spmm_ref
+    V, D, F = int(100_000 * scale), 16, 128
+    ell = jnp.asarray(rng.integers(0, V + 1, (V, D)).astype(np.int32))
+    x = jnp.asarray(rng.standard_normal((V + 1, F)).astype(np.float32))
+    f = jax.jit(lambda e, xx: ell_spmm_ref(e, xx, "sum"))
+    dt = _bench(f, ell, x)
+    record("kernel_ell_spmm_jnp", dt * 1e6,
+           f"gflops={2 * V * D * F / dt / 1e9:.1f}")
+
+    # chunked attention (flash twin): B4 S2048 H8 hd64
+    from repro.models.transformer import chunked_attention
+    q = jnp.asarray(rng.standard_normal((4, 2048, 8, 64)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((4, 2048, 2, 64)).astype(np.float32))
+    f = jax.jit(lambda a, b, c: chunked_attention(a, b, c, causal=True,
+                                                  q_offset=0, chunk=512))
+    dt = _bench(f, q, k, k)
+    flops = 4 * 4 * 2048 * 2048 * 8 * 64 / 2
+    record("kernel_attention_jnp", dt * 1e6,
+           f"gflops={flops / dt / 1e9:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Benchmark harness: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--scale 0.5] [--only exp1,exp3]
+
+Prints ``name,us_per_call,derived`` CSV lines (skeleton contract) and
+writes results/benchmarks.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+from . import (exp1_similarity, exp2_batch_size, exp3_decomposition,
+               exp4_gamma, exp5_scalability, exp6_ksp, exp7_path_counts,
+               kernels_bench)
+from .common import RESULTS
+
+ALL = {
+    "exp1": exp1_similarity.main,
+    "exp2": exp2_batch_size.main,
+    "exp3": exp3_decomposition.main,
+    "exp4": exp4_gamma.main,
+    "exp5": exp5_scalability.main,
+    "exp6": exp6_ksp.main,
+    "exp7": exp7_path_counts.main,
+    "kernels": kernels_bench.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="workload scale factor (graph sizes)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. exp1,exp3")
+    args = ap.parse_args()
+    chosen = (args.only.split(",") if args.only else list(ALL))
+    print("name,us_per_call,derived")
+    t0 = time.perf_counter()
+    detail = {}
+    for name in chosen:
+        try:
+            detail[name] = ALL[name](args.scale)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}_FAILED,0,{type(e).__name__}:{e}")
+    out = Path("results/benchmarks.json")
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps({"rows": RESULTS, "detail": detail},
+                              indent=1, default=str))
+    print(f"# total {time.perf_counter() - t0:.1f}s -> {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Fraud detection on a transaction network (paper §I application 1).
+
+A burst of transactions (t -> s edges about to be added) arrives; for each
+we ask whether paths s ->..-> t of <= k hops exist — each found path closes
+a suspicious cycle when the new edge lands. Transactions in a burst hit
+overlapping hub accounts, so the batch engine's sharing shines.
+
+    PYTHONPATH=src python examples/fraud_detection.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import BatchPathEngine, EngineConfig
+from repro.core import generators
+
+K = 5
+N_TX = 24
+
+net = generators.powerlaw(30_000, avg_deg=6.0, seed=7)   # account graph
+engine = BatchPathEngine(net, EngineConfig(gamma=0.5))
+
+# synthesize a burst: transactions target a few hub merchants
+rng = np.random.default_rng(0)
+hubs = rng.integers(0, 200, size=4)                      # popular merchants
+tx = []
+while len(tx) < N_TX:
+    payer = int(rng.integers(0, net.n))
+    merchant = int(hubs[rng.integers(0, len(hubs))])
+    if payer != merchant:
+        # new edge payer->merchant closes a cycle for each merchant->payer path
+        tx.append((merchant, payer, K))
+
+res = engine.process(tx, mode="batch")
+flagged = {i: res.paths[i] for i in range(len(tx)) if res.paths[i].shape[0]}
+print(f"burst of {len(tx)} transactions, k={K}")
+print(f"flagged {len(flagged)} transactions with cycle-closing paths")
+for i, paths in list(flagged.items())[:5]:
+    s, t, k = tx[i]
+    cyc = [int(v) for v in paths[0] if v >= 0]
+    print(f"  tx {t}->{s}: {paths.shape[0]} paths; "
+          f"e.g. cycle {cyc + [cyc[0]]}")
+print("sharing:", res.stats["n_shared"], "shared HC-s path queries across",
+      res.stats["n_clusters"], "clusters")

@@ -1,0 +1,7 @@
+"""repro: batch HC-s-t path query processing framework (JAX, multi-pod).
+
+Reproduction + beyond-paper optimization of "Batch Hop-Constrained s-t
+Simple Path Query Processing in Large Graphs" (CS.DB 2023), plus the
+assigned-architecture model zoo, distributed runtime and launchers.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,35 @@
+"""Architecture registry: --arch <id> resolution for launchers and tests."""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = {
+    # LM family
+    "granite-8b": "granite_8b",
+    "qwen1.5-110b": "qwen1_5_110b",
+    "qwen2.5-14b": "qwen2_5_14b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    # GNN family
+    "meshgraphnet": "meshgraphnet",
+    "graphcast": "graphcast",
+    "schnet": "schnet",
+    "graphsage-reddit": "graphsage_reddit",
+    # recsys
+    "two-tower-retrieval": "two_tower_retrieval",
+    # the paper's engine
+    "path-engine": "path_engine",
+}
+
+ASSIGNED = [a for a in ARCHS if a != "path-engine"]
+
+
+def get(arch: str):
+    """Returns the arch module (CONFIG, REDUCED, SHAPES, FAMILY)."""
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return importlib.import_module(f"repro.configs.{ARCHS[arch]}")
+
+
+def shapes_for(arch: str):
+    return get(arch).SHAPES

@@ -1,0 +1,12 @@
+"""The paper's engine as a dry-run architecture: billion-edge batch query
+processing (TW/FS-scale spec from Table I) on the production mesh."""
+from ..config import PathEngineConfig
+from ._shapes import ENGINE_SHAPES as SHAPES  # noqa: F401
+
+CONFIG = PathEngineConfig(name="path-engine", n_vertices=67_108_864,
+                          avg_degree=16, n_queries=512, k=6, ell_cap=64)
+
+REDUCED = PathEngineConfig(name="path-engine-reduced", n_vertices=4096,
+                           avg_degree=6, n_queries=16, k=4, ell_cap=16)
+
+FAMILY = "engine"

@@ -1,0 +1,44 @@
+"""ClusterQuery (Algorithm 2): threshold-stopped agglomerative clustering.
+
+Group similarity δ (Def 4.6) is the all-pairs average of μ, so merging is
+exactly average-linkage; we keep the O(|C|^2) merge scan of the paper
+(|Q| is "medium in size") with the standard Lance–Williams update instead
+of recomputing δ from scratch each round.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["cluster_queries"]
+
+
+def cluster_queries(mu: np.ndarray, gamma: float) -> list[list[int]]:
+    """Cluster query ids 0..Q-1 on the μ matrix; stop when max δ <= γ.
+
+    Returns a partition (list of clusters, each a list of query indices).
+    """
+    Q = mu.shape[0]
+    clusters: dict[int, list[int]] = {i: [i] for i in range(Q)}
+    delta = mu.astype(np.float64).copy()
+    np.fill_diagonal(delta, -np.inf)
+    alive = list(range(Q))
+    while len(alive) > 1:
+        sub = delta[np.ix_(alive, alive)]
+        flat = np.argmax(sub)
+        i_, j_ = divmod(flat, len(alive))
+        best = sub[i_, j_]
+        if best <= gamma:
+            break
+        a, b = alive[i_], alive[j_]
+        na, nb = len(clusters[a]), len(clusters[b])
+        # Lance–Williams average-linkage update of δ(a∪b, c)
+        for c in alive:
+            if c in (a, b):
+                continue
+            delta[a, c] = delta[c, a] = (na * delta[a, c] + nb * delta[b, c]) / (na + nb)
+        clusters[a] = clusters[a] + clusters[b]
+        del clusters[b]
+        delta[b, :] = -np.inf
+        delta[:, b] = -np.inf
+        alive.remove(b)
+    return [sorted(v) for v in clusters.values()]

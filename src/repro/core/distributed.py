@@ -1,0 +1,61 @@
+"""Distributed execution of the engine's device stages.
+
+The engine's heavy stages are pure pjit programs, so distribution is a
+placement decision:
+
+  * index (MS-BFS)   -- edges sharded over all mesh axes ("cells"); the
+                        frontier gather/segment-reduce runs under GSPMD
+                        (validated == single-device in tests/test_distributed).
+                        At billion-edge scale the packed-word axis shards over
+                        "model" and vertices over "data" (see §Perf cell A:
+                        -68% collective vs vertex-only sharding).
+  * similarity       -- Γ rows sharded over queries; popcount/matmul local.
+  * enumeration      -- whole clusters are the work unit (sharing graphs do
+                        not cross clusters): data-parallel replica groups with
+                        the work-stealing scheduler (ft/scheduler.py).
+
+This module provides the helpers that make those placements one-liners.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .graph import DeviceGraph, Graph
+
+__all__ = ["shard_edges", "distributed_graph"]
+
+
+def shard_edges(esrc: jax.Array, edst: jax.Array, mesh,
+                axes=("cells",)) -> tuple[jax.Array, jax.Array]:
+    """Place an edge list sharded over the mesh, padding to a device
+    multiple by repeating the final edge (a no-op in the boolean BFS
+    semiring and in segment-sum counts when masked downstream)."""
+    n_dev = int(np.prod([mesh.shape[a] for a in axes]))
+    m = esrc.shape[0]
+    pad = (-m) % n_dev
+    if pad:
+        esrc = jnp.concatenate([esrc, jnp.repeat(esrc[-1:], pad)])
+        edst = jnp.concatenate([edst, jnp.repeat(edst[-1:], pad)])
+    sh = NamedSharding(mesh, P(axes))
+    return jax.device_put(esrc, sh), jax.device_put(edst, sh)
+
+
+def distributed_graph(g: Graph, mesh, axes=("cells",)) -> DeviceGraph:
+    """DeviceGraph with edge lists sharded over the mesh (ELL replicated;
+    suitable for graphs whose index-pruned ELL fits per device, per
+    DESIGN.md §4 — the billion-edge dry-run path keeps ELL vertex-sharded
+    instead, see launch/steps._engine_bundle)."""
+    dg = DeviceGraph.build(g)
+    esrc, edst = shard_edges(dg.esrc, dg.edst, mesh, axes)
+    r_esrc, r_edst = shard_edges(dg.r_esrc, dg.r_edst, mesh, axes)
+    return DeviceGraph(
+        n=dg.n, m=int(esrc.shape[0]),
+        esrc=esrc, edst=edst,
+        ell_idx=dg.ell_idx, ell_mask=dg.ell_mask,
+        r_esrc=r_esrc, r_edst=r_edst,
+        r_ell_idx=dg.r_ell_idx, r_ell_mask=dg.r_ell_mask,
+        ell_cap=dg.ell_cap, r_ell_cap=dg.r_ell_cap,
+    )

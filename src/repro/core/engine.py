@@ -1,0 +1,428 @@
+"""BatchPathEngine: BasicEnum (Alg 1), BatchEnum (Alg 4) and the "+" variants.
+
+The engine is the device-side executor: the host planner (clustering +
+detection) emits per-cluster DirectionPlans; this module materializes HC-s
+path queries level by level (expand supersteps + splice joins), caches them
+(the paper's R), and assembles per-query HC-s-t results with the exact-split
+⊕ join. Every stage is static-shape jit with overflow-retry doubling.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import DeviceGraph, Graph
+from .index import QueryIndex, build_index, slack_from_dists, walk_counts
+from .pathset import PathSet, concat, empty, singleton, to_host
+from .enumerate import expand_level, extract_rows, select_ending_at
+from .join import cross_join, keyed_join, sort_by_last
+from .similarity import similarity_matrix
+from .clustering import cluster_queries
+from .detect import DirectionPlan, detect_common_queries
+
+__all__ = ["EngineConfig", "BatchPathEngine", "EngineOverflow", "BatchResult"]
+
+Query = tuple[int, int, int]
+
+
+class EngineOverflow(RuntimeError):
+    """A query exceeded hard capacity limits (the paper's OT analogue)."""
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    gamma: float = 0.5              # clustering threshold (paper default)
+    backend: str = "jnp"            # "jnp" | "pallas" (kernel-backed index/similarity)
+    min_cap: int = 256
+    max_cap: int = 1 << 20          # planned per-level frontier cap clamp
+    hard_cap: int = 1 << 22         # absolute limit before EngineOverflow
+    join_cap: int = 1 << 21
+    min_shared_budget: int = 2      # don't materialize trivially small shares
+    plus: bool = False              # cost-based fwd/bwd split (the "+" variants)
+    edge_chunk: int = 1 << 22
+    plan_caps: bool = True          # DP-based capacity planning
+    paper_faithful_shares: bool = False  # min_shared_budget -> 0
+
+
+@dataclasses.dataclass
+class BatchResult:
+    paths: dict[int, np.ndarray]    # query idx -> (n_paths, k+1) int32 (pad -1)
+    stats: dict
+
+
+def _pow2(x: int) -> int:
+    return 1 << max(int(x) - 1, 0).bit_length() if x > 1 else 1
+
+
+def _bucket(x: int, min_cap: int = 256) -> int:
+    """Quantize capacities to powers of four (fewer jit shape buckets)."""
+    b = min_cap
+    while b < x:
+        b *= 4
+    return b
+
+
+class BatchPathEngine:
+    def __init__(self, graph: Graph, config: Optional[EngineConfig] = None):
+        self.g = graph
+        self.cfg = config or EngineConfig()
+        self.dg = DeviceGraph.build(graph)
+        self._host_dists: dict = {}
+
+    def _dists_host(self, index: QueryIndex):
+        key = id(index)
+        if key not in self._host_dists:
+            self._host_dists.clear()
+            self._host_dists[key] = (np.asarray(index.dist_s),
+                                     np.asarray(index.dist_t))
+        return self._host_dists[key]
+
+    @staticmethod
+    def _slack_np(dist_cols: np.ndarray, ks: np.ndarray,
+                  offs: np.ndarray, INF: int):
+        d = dist_cols.astype(np.int32)
+        val = ks[None, :] - offs[None, :] - d
+        val = np.where(d >= INF, -1, val)
+        out = np.clip(val.max(axis=1), -1, 127).astype(np.int8)
+        out[-1] = -1
+        return jnp.asarray(out)
+
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+    def process(self, queries: Sequence[Query], mode: str = "batch") -> BatchResult:
+        """mode: 'basic' | 'basic+' | 'batch' | 'batch+' | 'pathenum'."""
+        queries = [(int(s), int(t), int(k)) for s, t, k in queries]
+        for s, t, k in queries:
+            if s == t:
+                raise ValueError("s == t queries are cycles, not s-t paths")
+            if k < 1:
+                raise ValueError("hop constraint must be >= 1")
+        plus = mode.endswith("+") or self.cfg.plus
+        stats: dict = {"mode": mode, "n_queries": len(queries)}
+        t0 = time.perf_counter()
+        if mode == "pathenum":
+            return self._run_pathenum(queries, stats)
+        index = build_index(self.dg, queries, self.cfg.edge_chunk)
+        index.dist_s.block_until_ready()
+        stats["t_build_index"] = time.perf_counter() - t0
+        if mode.startswith("batch"):
+            return self._run_batch(queries, index, plus, stats)
+        return self._run_basic(queries, index, plus, stats)
+
+    # ------------------------------------------------------------------
+    # BasicEnum (Alg 1): shared index, per-query bidirectional enumeration
+    # ------------------------------------------------------------------
+    def _run_basic(self, queries, index: QueryIndex, plus: bool, stats) -> BatchResult:
+        t0 = time.perf_counter()
+        results = {}
+        for qi, (s, t, k) in enumerate(queries):
+            a, b = self._split(qi, index, plus)
+            fs = self._dedicated_slack(index, qi, forward=True)
+            bs = self._dedicated_slack(index, qi, forward=False)
+            fl = self._run_node(False, s, a, fs, [], stop_vertex=t)
+            bl = self._run_node(True, t, b, bs, [], stop_vertex=s)
+            results[qi] = to_host(self._assemble(fl, a, bl, b, t, k))
+        stats["t_enumerate"] = time.perf_counter() - t0
+        return BatchResult(paths=results, stats=stats)
+
+    def _run_pathenum(self, queries, stats) -> BatchResult:
+        """Per-query index construction + enumeration (the PathEnum baseline)."""
+        results = {}
+        t_idx = t_enum = 0.0
+        for qi, (s, t, k) in enumerate(queries):
+            t0 = time.perf_counter()
+            index = build_index(self.dg, [(s, t, k)], self.cfg.edge_chunk)
+            index.dist_s.block_until_ready()
+            t_idx += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            a, b = self._split(0, index, False)
+            fs = self._dedicated_slack(index, 0, forward=True)
+            bs = self._dedicated_slack(index, 0, forward=False)
+            fl = self._run_node(False, s, a, fs, [], stop_vertex=t)
+            bl = self._run_node(True, t, b, bs, [], stop_vertex=s)
+            results[qi] = to_host(self._assemble(fl, a, bl, b, t, k))
+            t_enum += time.perf_counter() - t0
+        stats["t_build_index"] = t_idx
+        stats["t_enumerate"] = t_enum
+        return BatchResult(paths=results, stats=stats)
+
+    # ------------------------------------------------------------------
+    # BatchEnum (Alg 4): cluster -> detect -> shared enumeration
+    # ------------------------------------------------------------------
+    def _run_batch(self, queries, index: QueryIndex, plus: bool, stats) -> BatchResult:
+        t0 = time.perf_counter()
+        mu = similarity_matrix(index, backend=self.cfg.backend)
+        clusters = cluster_queries(mu, self.cfg.gamma)
+        stats["t_cluster"] = time.perf_counter() - t0
+        stats["n_clusters"] = len(clusters)
+        stats["mu_mean"] = float((mu.sum() - len(queries)) /
+                                 max(len(queries) * (len(queries) - 1), 1))
+
+        min_sb = 0 if self.cfg.paper_faithful_shares else self.cfg.min_shared_budget
+        results = {}
+        t_detect = t_enum = 0.0
+        n_shared_total = n_dedup_total = n_edges_total = 0
+        for cluster in clusters:
+            t0 = time.perf_counter()
+            halves_f = {}
+            halves_b = {}
+            for qi in cluster:
+                s, t, k = queries[qi]
+                a, b = self._split(qi, index, plus)
+                halves_f[qi] = (s, a)
+                halves_b[qi] = (t, b)
+            hop_f = self._hop_ok(index, cluster, forward=True)
+            hop_b = self._hop_ok(index, cluster, forward=False)
+            plan_f = detect_common_queries(self.g, cluster, halves_f, hop_f,
+                                           reverse=False, min_shared_budget=min_sb)
+            plan_b = detect_common_queries(self.g, cluster, halves_b, hop_b,
+                                           reverse=True, min_shared_budget=min_sb)
+            n_shared_total += plan_f.n_shared + plan_b.n_shared
+            n_dedup_total += 2 * len(cluster) - len(plan_f.half_of_query and
+                                                    set(plan_f.half_of_query.values())) \
+                - len(set(plan_b.half_of_query.values()))
+            n_edges_total += sum(len(n.in_edges) for n in plan_f.nodes)
+            n_edges_total += sum(len(n.in_edges) for n in plan_b.nodes)
+            t_detect += time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            cache_f = self._run_plan(plan_f, index, forward=True)
+            cache_b = self._run_plan(plan_b, index, forward=False)
+            assembled: dict = {}   # identical (halves, k) -> identical results
+            for qi in cluster:
+                s, t, k = queries[qi]
+                a = halves_f[qi][1]
+                b = halves_b[qi][1]
+                fid = plan_f.half_of_query[qi]
+                bid = plan_b.half_of_query[qi]
+                key = (fid, bid, a, b, k, t)
+                if key not in assembled:
+                    fl = cache_f[fid]
+                    bl = cache_b[bid]
+                    assembled[key] = to_host(
+                        self._assemble(fl, a, bl, b, t, k))
+                results[qi] = assembled[key]
+            t_enum += time.perf_counter() - t0
+        stats["t_detect"] = t_detect
+        stats["t_enumerate"] = t_enum
+        stats["n_shared"] = n_shared_total
+        stats["n_dedup"] = n_dedup_total
+        stats["n_share_edges"] = n_edges_total
+        return BatchResult(paths=results, stats=stats)
+
+    # ------------------------------------------------------------------
+    # plan execution: materialize every Ψ node in topological order
+    # ------------------------------------------------------------------
+    def _run_plan(self, plan: DirectionPlan, index: QueryIndex, forward: bool):
+        cache: dict[int, list[PathSet]] = {}
+        refcount = {n.nid: len(n.out_edges) +
+                    (1 if n.query is not None else 0) for n in plan.nodes}
+        for nid in plan.topo:
+            node = plan.nodes[nid]
+            slack = self._node_slack(index, node.consumers, forward)
+            # dedicated-node optimization: a half used by exactly one query
+            # and spliced by nobody may stop at its own endpoint (Alg 1)
+            stop = -2
+            if (node.query is not None and len(node.consumers) == 1
+                    and not node.out_edges):
+                qi = node.consumers[0][0]
+                s_, t_, _ = index.queries[qi]
+                stop = t_ if forward else s_
+            children = []
+            seen_src: dict[int, int] = {}
+            for cid in node.in_edges:
+                c = plan.nodes[cid]
+                # dedupe children rooted at the same vertex: keep max budget
+                if c.src in seen_src and plan.nodes[seen_src[c.src]].budget >= c.budget:
+                    continue
+                seen_src[c.src] = cid
+            for cid in seen_src.values():
+                c = plan.nodes[cid]
+                children.append((c.src, c.budget, cache[cid]))
+            cache[nid] = self._run_node(not forward, node.src, node.budget,
+                                        slack, children, stop_vertex=stop)
+        return cache
+
+    # ------------------------------------------------------------------
+    # node enumeration with overflow retry
+    # ------------------------------------------------------------------
+    def _run_node(self, reverse: bool, source: int, budget: int, slack,
+                  children, stop_vertex: int = -2):
+        caps = self._plan_caps(reverse, source, budget, slack)
+        for _ in range(8):
+            out = self._run_node_once(reverse, source, budget, slack, children,
+                                      stop_vertex, caps)
+            if out is not None:
+                return out
+            caps = [min(c * 4, self.cfg.hard_cap) for c in caps]
+            if all(c >= self.cfg.hard_cap for c in caps[1:]):
+                raise EngineOverflow(
+                    f"node (src={source}, budget={budget}) exceeds hard_cap")
+        raise EngineOverflow("retry limit reached")
+
+    def _run_node_once(self, reverse, source, budget, slack, children,
+                       stop_vertex, caps):
+        ell_idx, ell_mask = self.dg.direction(reverse)
+        width = budget + 1
+        n = self.dg.n
+        splice_np = np.full(n + 1, -1, np.int8)
+        for (csrc, cb, _) in children:
+            splice_np[csrc] = cb
+        splice_vec = jnp.asarray(splice_np)
+        stop = jnp.int32(stop_vertex)
+
+        pools: list[list[PathSet]] = [[] for _ in range(budget + 1)]
+        frontier = singleton(source, width)
+        pools[0].append(frontier)
+        for lvl in range(budget):
+            if int(frontier.count) == 0:
+                break
+            out = expand_level(frontier.verts, frontier.count, ell_idx, ell_mask,
+                               slack, splice_vec, stop,
+                               level=lvl, budget=budget, out_cap=caps[lvl + 1])
+            if bool(out.frontier.overflow):
+                return None
+            for (csrc, cb, clevels) in children:
+                rmask = (out.splice_hit & (out.nbrs == csrc)).any(axis=1)
+                prefixes = extract_rows(frontier.verts, rmask,
+                                        out_cap=frontier.cap)
+                if int(prefixes.count) == 0:
+                    continue
+                for lam in range(0, min(cb, budget - lvl - 1) + 1):
+                    cl = clevels[lam]
+                    if int(cl.count) == 0:
+                        continue
+                    res = self._retry_join(
+                        lambda cap: cross_join(
+                            prefixes.verts, prefixes.count, cl.verts, cl.count,
+                            p_col=lvl, c_col=lam, out_cap=cap, out_width=width),
+                        est=int(prefixes.count) * int(cl.count))
+                    pools[lvl + 1 + lam].append(res)
+            frontier = out.frontier
+            pools[lvl + 1].append(out.frontier)
+        merged = [concat(p) if p else empty(1, width) for p in pools]
+        return [self._shrink(ps) for ps in merged]
+
+    def _shrink(self, ps: PathSet) -> PathSet:
+        """Slice a packed PathSet down to a tight capacity bucket — keeps
+        the downstream join/sort jit cache to a handful of shapes."""
+        tight = _bucket(int(ps.count), self.cfg.min_cap)
+        if tight >= ps.cap:
+            return ps
+        return PathSet(ps.verts[:tight], ps.count, ps.overflow)
+
+    def _retry_join(self, fn, est: int) -> PathSet:
+        cap = _bucket(min(max(est, self.cfg.min_cap), self.cfg.join_cap),
+                      self.cfg.min_cap)
+        while True:
+            res = fn(cap)
+            if not bool(res.overflow):
+                return res
+            if cap >= self.cfg.hard_cap:
+                raise EngineOverflow("join exceeds hard_cap")
+            cap = min(cap * 4, self.cfg.hard_cap)
+
+    # ------------------------------------------------------------------
+    # final ⊕ assembly (exact split, each result exactly once)
+    # ------------------------------------------------------------------
+    def _assemble(self, fwd_levels, a: int, bwd_levels, b: int, t: int, k: int):
+        width = k + 1
+        outs = []
+        for lvl in range(1, min(a, len(fwd_levels) - 1) + 1):
+            ps = fwd_levels[lvl]
+            if int(ps.count) == 0:
+                continue
+            sel = select_ending_at(ps.verts, ps.count, jnp.int32(t),
+                                   col=lvl, out_cap=ps.cap)
+            if int(sel.count):
+                outs.append(_pad_width(sel, width))
+        if b >= 1 and len(fwd_levels) > a and int(fwd_levels[a].count) > 0:
+            fa = fwd_levels[a]
+            sa = sort_by_last(fa.verts, fa.count, col=a)
+            for lam in range(1, min(b, len(bwd_levels) - 1) + 1):
+                bs = bwd_levels[lam]
+                if int(bs.count) == 0:
+                    continue
+                res = self._retry_join(
+                    lambda cap: keyed_join(sa, bs.verts, bs.count, a_col=a,
+                                           b_col=lam, out_cap=cap, out_width=width),
+                    est=max(int(fa.count), int(bs.count)))
+                if int(res.count):
+                    outs.append(res)
+        if not outs:
+            return empty(1, width)
+        return concat(outs)
+
+    # ------------------------------------------------------------------
+    # helpers
+    # ------------------------------------------------------------------
+    def _split(self, qi: int, index: QueryIndex, plus: bool) -> tuple[int, int]:
+        s, t, k = index.queries[qi]
+        a = (k + 1) // 2
+        if not plus or k <= 2:
+            return a, k - a
+        # "+" variants: pick the split minimizing estimated search cost
+        fs = self._dedicated_slack(index, qi, forward=True)
+        bs = self._dedicated_slack(index, qi, forward=False)
+        cf = np.asarray(walk_counts(self.dg.esrc, self.dg.edst, s, fs,
+                                    n=self.dg.n, budget=k - 1,
+                                    edge_chunk=self.cfg.edge_chunk))
+        cb = np.asarray(walk_counts(self.dg.r_esrc, self.dg.r_edst, t, bs,
+                                    n=self.dg.n, budget=k - 1,
+                                    edge_chunk=self.cfg.edge_chunk))
+        best, best_cost = a, None
+        for cand in range(1, k):
+            cost = cf[:cand + 1].sum() + cb[:k - cand + 1].sum()
+            if best_cost is None or cost < best_cost:
+                best, best_cost = cand, cost
+        return best, k - best
+
+    def _dedicated_slack(self, index: QueryIndex, qi: int, forward: bool):
+        s, t, k = index.queries[qi]
+        ds, dt = self._dists_host(index)
+        col = (dt[:, index.tgt_col[qi]] if forward
+               else ds[:, index.src_col[qi]])[:, None]
+        return self._slack_np(col, np.array([k], np.int32),
+                              np.array([0], np.int32), index.INF)
+
+    def _node_slack(self, index: QueryIndex, consumers, forward: bool):
+        qs = [qi for qi, _ in consumers]
+        offs = np.array([off for _, off in consumers], np.int32)
+        ks = np.array([index.queries[qi][2] for qi in qs], np.int32)
+        ds, dt = self._dists_host(index)
+        cols = dt[:, index.tgt_col[qs]] if forward else ds[:, index.src_col[qs]]
+        return self._slack_np(cols, ks, offs, index.INF)
+
+    def _hop_ok(self, index: QueryIndex, cluster, forward: bool) -> np.ndarray:
+        k_max = max(index.queries[qi][2] for qi in cluster)
+        if forward:
+            cols = np.asarray(index.dist_t[:-1, index.tgt_col[list(cluster)]])
+        else:
+            cols = np.asarray(index.dist_s[:-1, index.src_col[list(cluster)]])
+        return (cols.min(axis=1) <= k_max)
+
+    def _plan_caps(self, reverse: bool, source: int, budget: int, slack):
+        if not self.cfg.plan_caps:
+            return [self.cfg.min_cap] * (budget + 1)
+        esrc = self.dg.r_esrc if reverse else self.dg.esrc
+        edst = self.dg.r_edst if reverse else self.dg.edst
+        tot = np.asarray(walk_counts(esrc, edst, source, slack, n=self.dg.n,
+                                     budget=budget,
+                                     edge_chunk=self.cfg.edge_chunk))
+        caps = [_bucket(min(int(min(t, 2**31)), self.cfg.max_cap),
+                        self.cfg.min_cap) for t in tot]
+        return caps
+
+
+def _pad_width(ps: PathSet, width: int) -> PathSet:
+    pad = width - ps.verts.shape[1]
+    if pad <= 0:
+        return ps
+    verts = jnp.pad(ps.verts, ((0, 0), (0, pad)), constant_values=-1)
+    return PathSet(verts, ps.count, ps.overflow)

@@ -1,0 +1,90 @@
+"""Frontier path-enumeration supersteps (TPU form of Alg 1/4 ``Search``).
+
+The recursive DFS of the paper becomes level-synchronous: the level-l
+frontier is a PathSet of all simple paths of length exactly l that survive
+the slack prune. One superstep expands every frontier path by every
+ELL neighbor at once, masks invalid candidates (padding / duplicate vertex /
+Lemma-3.1 slack prune / splice triggers), and cumsum-compacts the survivors.
+
+Splice handling (BatchEnum, Alg 4 lines 20-23): vertices that root a
+materialized dominating HC-s path query are *not* expanded when the cached
+budget covers the remaining budget; the (prefix x cached-suffix) cross join
+happens in join.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .pathset import PathSet, compact_rows
+
+__all__ = ["ExpandOut", "expand_level", "extract_rows", "select_ending_at"]
+
+
+class ExpandOut(NamedTuple):
+    frontier: PathSet     # level+1 frontier (spliced candidates excluded)
+    nbrs: jax.Array       # (cap, D) raw neighbor matrix (for splice extraction)
+    splice_hit: jax.Array  # (cap, D) bool -- candidates redirected to splice
+
+
+@partial(jax.jit, static_argnames=("level", "budget", "out_cap"))
+def expand_level(verts: jax.Array, count: jax.Array,
+                 ell_idx: jax.Array, ell_mask: jax.Array,
+                 slack: jax.Array, splice_budget: jax.Array,
+                 stop_vertex: jax.Array,
+                 *, level: int, budget: int, out_cap: int) -> ExpandOut:
+    """One superstep: expand all level-`level` paths by one hop.
+
+    verts:  (cap, L) int32 frontier paths (cols 0..level used).
+    slack:  (n+1,) int8 -- keep candidate v at depth d iff slack[v] >= d.
+    splice_budget: (n+1,) int8 -- kappa' of a materialized dominating query
+            rooted at v, else -1. Candidates with
+            splice_budget[v] >= budget-(level+1) splice instead of expanding.
+    stop_vertex: () int32 -- do not expand *from* this vertex (dedicated
+            query optimization; pass -2 to disable).
+    """
+    cap, L = verts.shape
+    n = ell_idx.shape[0] - 1  # ell tables carry a sentinel row n
+    D = ell_idx.shape[1]
+    row_valid = jnp.arange(cap) < count
+    last = jnp.where(row_valid, verts[:, level], n)
+    nbrs = ell_idx[last]                             # (cap, D)
+    valid = ell_mask[last] & row_valid[:, None]
+    valid &= (last != stop_vertex)[:, None]
+    # duplicate-vertex mask: candidate already on the path
+    dup = (nbrs[:, :, None] == verts[:, None, :level + 1]).any(-1)
+    # Lemma 3.1 prune at depth level+1
+    keep = valid & ~dup & (slack[nbrs] >= level + 1)
+    # splice triggers (cached dominating query covers the remaining budget)
+    remaining = budget - (level + 1)
+    splice_hit = keep & (splice_budget[nbrs] >= remaining)
+    expand_mask = keep & ~splice_hit
+
+    # build candidate rows: prefix + new vertex at column level+1
+    flat_mask = expand_mask.reshape(-1)
+    rows = jnp.repeat(jnp.arange(cap), D)
+    cand = verts[rows]                               # (cap*D, L)
+    cand = cand.at[:, level + 1].set(nbrs.reshape(-1))
+    out, n_out, ovf = compact_rows(flat_mask, cand, out_cap)
+    return ExpandOut(frontier=PathSet(out, n_out, ovf),
+                     nbrs=nbrs, splice_hit=splice_hit)
+
+
+@partial(jax.jit, static_argnames=("out_cap",))
+def extract_rows(verts: jax.Array, row_mask: jax.Array, *, out_cap: int) -> PathSet:
+    """Compact the rows of `verts` where row_mask is True."""
+    out, n_out, ovf = compact_rows(row_mask, verts, out_cap)
+    return PathSet(out, n_out, ovf)
+
+
+@partial(jax.jit, static_argnames=("col", "out_cap"))
+def select_ending_at(verts: jax.Array, count: jax.Array, vertex,
+                     *, col: int, out_cap: int) -> PathSet:
+    """Rows whose path ends (column `col`) at `vertex` (forward-complete paths)."""
+    cap = verts.shape[0]
+    mask = (jnp.arange(cap) < count) & (verts[:, col] == vertex)
+    out, n_out, ovf = compact_rows(mask, verts, out_cap)
+    return PathSet(out, n_out, ovf)

@@ -1,0 +1,189 @@
+"""Graph containers for the batch HC-s-t path engine.
+
+The host-side ``Graph`` is built with numpy (CSR both directions, padded-ELL
+views, destination-sorted edge lists). Device views are materialized lazily
+as jnp arrays. All layouts are static-shape so every downstream stage is
+jit-compilable:
+
+  * CSR            -- indptr/indices, canonical storage.
+  * edge list      -- (src, dst) sorted by dst; drives segment-reduce hops.
+  * padded ELL     -- (V, max_deg_cap) neighbor matrix padded with the
+                      sentinel row ``V`` (frontier tables carry one extra
+                      zero row); drives the Pallas kernels and the
+                      enumeration gather. Vertices with deg > cap spill to a
+                      COO remainder (power-law safety valve).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import cached_property
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["Graph", "DeviceGraph", "EllView"]
+
+SENTINEL = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class EllView:
+    """Padded ELL adjacency: idx[v, d] = d-th out-neighbor or n (sentinel)."""
+
+    idx: np.ndarray          # (n, cap) int32, padded with n
+    mask: np.ndarray         # (n, cap) bool
+    spill_src: np.ndarray    # (n_spill,) int32 COO remainder
+    spill_dst: np.ndarray    # (n_spill,) int32
+    cap: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Directed graph, CSR in both directions. Vertices are 0..n-1."""
+
+    n: int
+    indptr: np.ndarray       # (n+1,) int64 — out-edges CSR
+    indices: np.ndarray      # (m,) int32, sorted within row
+    r_indptr: np.ndarray     # (n+1,) int64 — in-edges CSR (reverse graph)
+    r_indices: np.ndarray    # (m,) int32
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def from_edges(n: int, src, dst, dedup: bool = True) -> "Graph":
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        if src.size:
+            keep = src != dst  # drop self loops: never on a simple path twice
+            src, dst = src[keep], dst[keep]
+        if dedup and src.size:
+            key = src * n + dst
+            _, uniq = np.unique(key, return_index=True)
+            src, dst = src[uniq], dst[uniq]
+        indptr, indices = _csr(n, src, dst)
+        r_indptr, r_indices = _csr(n, dst, src)
+        return Graph(n=n, indptr=indptr, indices=indices,
+                     r_indptr=r_indptr, r_indices=r_indices)
+
+    # ------------------------------------------------------------------
+    @property
+    def m(self) -> int:
+        return int(self.indices.shape[0])
+
+    def out_degree(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    def in_degree(self) -> np.ndarray:
+        return np.diff(self.r_indptr)
+
+    def neighbors(self, v: int, reverse: bool = False) -> np.ndarray:
+        ip, ix = (self.r_indptr, self.r_indices) if reverse else (self.indptr, self.indices)
+        return ix[ip[v]:ip[v + 1]]
+
+    # -- edge lists sorted by destination (segment-reduce friendly) ----
+    @cached_property
+    def edges_by_dst(self) -> tuple[np.ndarray, np.ndarray]:
+        """(src, dst) of G with dst non-decreasing."""
+        dst = np.repeat(np.arange(self.n, dtype=np.int32), np.diff(self.r_indptr))
+        src = self.r_indices
+        return src.astype(np.int32), dst
+
+    @cached_property
+    def r_edges_by_dst(self) -> tuple[np.ndarray, np.ndarray]:
+        """(src, dst) of G_r with dst non-decreasing (i.e. edges of G keyed by src)."""
+        dst = np.repeat(np.arange(self.n, dtype=np.int32), np.diff(self.indptr))
+        src = self.indices
+        return src.astype(np.int32), dst
+
+    # -- padded ELL views ----------------------------------------------
+    def ell(self, cap: Optional[int] = None, reverse: bool = False) -> EllView:
+        ip, ix = (self.r_indptr, self.r_indices) if reverse else (self.indptr, self.indices)
+        deg = np.diff(ip).astype(np.int64)
+        if cap is None:
+            cap = int(deg.max()) if self.n else 1
+        cap = max(int(cap), 1)
+        idx = np.full((self.n, cap), self.n, dtype=np.int32)
+        # vectorized fill of the first `cap` neighbors per row
+        take = np.minimum(deg, cap)
+        rows = np.repeat(np.arange(self.n), take)
+        cols = _ragged_arange(take)
+        flat = np.repeat(ip[:-1], take) + cols
+        idx[rows, cols] = ix[flat]
+        mask = idx != self.n
+        # spill: neighbors beyond cap
+        extra = deg - take
+        s_rows = np.repeat(np.arange(self.n, dtype=np.int32), extra)
+        s_cols = _ragged_arange(extra) + np.repeat(take, extra)
+        s_flat = np.repeat(ip[:-1], extra) + s_cols
+        return EllView(idx=idx, mask=mask,
+                       spill_src=s_rows, spill_dst=ix[s_flat].astype(np.int32),
+                       cap=cap)
+
+    def reverse(self) -> "Graph":
+        return Graph(n=self.n, indptr=self.r_indptr, indices=self.r_indices,
+                     r_indptr=self.indptr, r_indices=self.indices)
+
+
+def _csr(n: int, src: np.ndarray, dst: np.ndarray):
+    order = np.lexsort((dst, src))
+    src, dst = src[order], dst[order]
+    counts = np.bincount(src, minlength=n).astype(np.int64)
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return indptr, dst.astype(np.int32)
+
+
+def _ragged_arange(counts: np.ndarray) -> np.ndarray:
+    """[0..c0), [0..c1), ... concatenated."""
+    counts = counts.astype(np.int64)
+    total = int(counts.sum())
+    if total == 0:
+        return np.zeros(0, dtype=np.int64)
+    offs = np.repeat(np.concatenate([[0], np.cumsum(counts)[:-1]]), counts)
+    return np.arange(total, dtype=np.int64) - offs
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceGraph:
+    """jnp views of a Graph (built once per engine instance)."""
+
+    n: int
+    m: int
+    # forward direction
+    esrc: "jax.Array"        # (m,) int32 sorted by dst
+    edst: "jax.Array"
+    ell_idx: "jax.Array"     # (n, cap) int32, pad = n
+    ell_mask: "jax.Array"
+    # reverse direction
+    r_esrc: "jax.Array"
+    r_edst: "jax.Array"
+    r_ell_idx: "jax.Array"
+    r_ell_mask: "jax.Array"
+    ell_cap: int
+    r_ell_cap: int
+
+    @staticmethod
+    def build(g: Graph, ell_cap: Optional[int] = None) -> "DeviceGraph":
+        import jax.numpy as jnp
+
+        ell = g.ell(cap=ell_cap)
+        rell = g.reverse().ell(cap=ell_cap)
+        if ell.spill_src.size or rell.spill_src.size:
+            raise ValueError(
+                "ell_cap too small: spill present; enumeration requires the "
+                "full ELL (pass ell_cap=None or >= max degree)")
+        esrc, edst = g.edges_by_dst
+        r_esrc, r_edst = g.r_edges_by_dst
+        return DeviceGraph(
+            n=g.n, m=g.m,
+            esrc=jnp.asarray(esrc), edst=jnp.asarray(edst),
+            ell_idx=jnp.asarray(ell.idx), ell_mask=jnp.asarray(ell.mask),
+            r_esrc=jnp.asarray(r_esrc), r_edst=jnp.asarray(r_edst),
+            r_ell_idx=jnp.asarray(rell.idx), r_ell_mask=jnp.asarray(rell.mask),
+            ell_cap=ell.cap, r_ell_cap=rell.cap,
+        )
+
+    def direction(self, reverse: bool):
+        """(ell_idx, ell_mask) for a search direction."""
+        if reverse:
+            return self.r_ell_idx, self.r_ell_mask
+        return self.ell_idx, self.ell_mask

@@ -1,0 +1,122 @@
+"""Query index: per-source/target distance matrices, slack vectors, DP planner.
+
+This is PathEnum's light-weight index (Lemma 3.1) built for the whole batch
+with one multi-source BFS per direction (Alg 1/4 lines 1-2), plus two
+engine-internal derived products:
+
+  * slack vectors -- per-query / per-shared-node prune thresholds
+      slack[v] = max over consumers (k_q - offset_q - dist(v, endpoint_q))
+    A frontier vertex v at depth d survives iff d <= slack[v]
+    (equivalently Lemma 3.1's  |p| + dist(v, t) <= k).
+
+  * walk-count DP -- c_{l+1}[v] = sum_{(u,v)} c_l[u] * [slack[v] >= l+1]
+    an upper bound on per-level path counts, used to plan static buffer
+    capacities and to pick the forward/backward split (the "+" variants'
+    cost-based search order, after PathEnum [15]).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import DeviceGraph, Graph
+from .msbfs import msbfs_dist, INF_FOR
+
+__all__ = ["QueryIndex", "build_index", "walk_counts", "slack_from_dists"]
+
+Query = tuple[int, int, int]  # (s, t, k)
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryIndex:
+    queries: tuple[Query, ...]
+    k_max: int
+    sources: np.ndarray       # (Su,) unique source vertices
+    targets: np.ndarray       # (Tu,) unique target vertices
+    src_col: np.ndarray       # (Q,) column of q.s in dist_s
+    tgt_col: np.ndarray       # (Q,) column of q.t in dist_t
+    dist_s: jax.Array         # (n+1, Su) int8 -- dist_G(s, v); row n = INF
+    dist_t: jax.Array         # (n+1, Tu) int8 -- dist_{G_r}(t, v) = dist_G(v, t)
+    INF: int
+
+    def fwd_slack(self, qi: int) -> jax.Array:
+        """(n+1,) int8 slack for the forward search of query qi."""
+        s, t, k = self.queries[qi]
+        return slack_from_dists(self.dist_t[:, self.tgt_col[qi]][:, None],
+                                np.array([k]), np.array([0]), self.INF)
+
+    def bwd_slack(self, qi: int) -> jax.Array:
+        s, t, k = self.queries[qi]
+        return slack_from_dists(self.dist_s[:, self.src_col[qi]][:, None],
+                                np.array([k]), np.array([0]), self.INF)
+
+    def gamma_sizes(self, hops: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """|Γ(q)|, |Γ_r(q)| for each query (vertices within q.k hops)."""
+        ds = np.asarray(self.dist_s)[:-1]  # (n, Su)
+        dt = np.asarray(self.dist_t)[:-1]
+        gs = (ds[:, self.src_col] <= hops[None, :]).sum(0)
+        gr = (dt[:, self.tgt_col] <= hops[None, :]).sum(0)
+        return gs, gr
+
+
+def slack_from_dists(dist_cols: jax.Array, ks: np.ndarray, offsets: np.ndarray,
+                     INF: int) -> jax.Array:
+    """slack[v] = max_c (ks[c] - offsets[c] - dist_cols[v, c]); INF dist -> -1.
+
+    dist_cols: (n+1, C) int8; returns (n+1,) int8 (row n forced to -1).
+    """
+    d = dist_cols.astype(jnp.int32)
+    val = ks[None, :].astype(np.int32) - offsets[None, :].astype(np.int32) - d
+    val = jnp.where(d >= INF, -1, val)
+    out = jnp.max(val, axis=1)
+    out = jnp.clip(out, -1, 127).astype(jnp.int8)
+    return out.at[-1].set(-1)
+
+
+def build_index(dg: DeviceGraph, queries: Sequence[Query],
+                edge_chunk: int = 1 << 22) -> QueryIndex:
+    """Multi-source BFS from all sources on G and all targets on G_r."""
+    queries = tuple((int(s), int(t), int(k)) for s, t, k in queries)
+    k_max = max(k for _, _, k in queries)
+    srcs = np.unique(np.array([q[0] for q in queries], np.int32))
+    tgts = np.unique(np.array([q[1] for q in queries], np.int32))
+    src_col = np.searchsorted(srcs, [q[0] for q in queries]).astype(np.int32)
+    tgt_col = np.searchsorted(tgts, [q[1] for q in queries]).astype(np.int32)
+    dist_s = msbfs_dist(dg.esrc, dg.edst, jnp.asarray(srcs),
+                        n=dg.n, k_max=k_max, edge_chunk=edge_chunk)
+    dist_t = msbfs_dist(dg.r_esrc, dg.r_edst, jnp.asarray(tgts),
+                        n=dg.n, k_max=k_max, edge_chunk=edge_chunk)
+    return QueryIndex(queries=queries, k_max=k_max, sources=srcs, targets=tgts,
+                      src_col=src_col, tgt_col=tgt_col,
+                      dist_s=dist_s, dist_t=dist_t, INF=INF_FOR(k_max))
+
+
+@partial(jax.jit, static_argnames=("n", "budget", "edge_chunk"))
+def walk_counts(esrc: jax.Array, edst: jax.Array, source, slack: jax.Array,
+                *, n: int, budget: int, edge_chunk: int = 1 << 22) -> jax.Array:
+    """Per-level pruned-walk counts: upper bound on enumeration frontier sizes.
+
+    Returns (budget+1,) float32 totals (level 0 == 1). Uses float to avoid
+    overflow on explosive workloads; the planner clamps anyway.
+    """
+    c = jnp.zeros((n,), jnp.float32).at[source].set(1.0)
+    totals = [jnp.float32(1.0)]
+    keep0 = (slack[:-1] >= 0)
+    m = esrc.shape[0]
+    for lvl in range(1, budget + 1):
+        nxt = jnp.zeros((n,), jnp.float32)
+        for lo in range(0, m, edge_chunk):
+            hi = min(lo + edge_chunk, m)
+            msgs = c[esrc[lo:hi]]
+            nxt = nxt + jax.ops.segment_sum(msgs, edst[lo:hi], num_segments=n,
+                                            indices_are_sorted=True)
+        nxt = nxt * (slack[:-1] >= lvl)
+        c = nxt
+        totals.append(jnp.sum(nxt))
+    del keep0
+    return jnp.stack(totals)

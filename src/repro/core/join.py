@@ -1,0 +1,119 @@
+"""Path concatenation ⊕ (Def 3.1) as static-shape sort/searchsorted joins.
+
+Two flavours:
+
+  * keyed_join   -- the bidirectional final join: forward paths of length
+                    exactly `a` matched with backward paths on the shared
+                    last vertex (hash join -> sort + searchsorted bucket
+                    join; each output path is produced exactly once).
+  * cross_join   -- the splice join: (prefix x cached child suffix), no key
+                    (the prefix's appended vertex == child's source).
+
+Both enumerate pair-ids into a static `out_cap` buffer with an overflow
+flag, assemble the concatenated vertex rows, and apply the vectorized
+simple-path (duplicate-vertex) filter -- the O(L^2) check the paper does
+per emitted path (Alg 1 line 8 / Alg 4 line 13).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .pathset import PathSet, compact_rows
+
+__all__ = ["sort_by_last", "keyed_join", "cross_join", "SortedSide"]
+
+
+class SortedSide(NamedTuple):
+    verts: jax.Array   # (cap, L) rows sorted by key (invalid rows last)
+    keys: jax.Array    # (cap,) sorted keys (invalid = big sentinel)
+    count: jax.Array
+
+
+@partial(jax.jit, static_argnames=("col",))
+def sort_by_last(verts: jax.Array, count: jax.Array, *, col: int) -> SortedSide:
+    cap = verts.shape[0]
+    valid = jnp.arange(cap) < count
+    keys = jnp.where(valid, verts[:, col], jnp.int32(2**31 - 1))
+    order = jnp.argsort(keys)
+    return SortedSide(verts=verts[order], keys=keys[order], count=count)
+
+
+def _dup_mask(assembled: jax.Array, width: int) -> jax.Array:
+    """True where a row contains a repeated (non-negative) vertex."""
+    a = assembled[:, :, None]
+    b = assembled[:, None, :]
+    eq = (a == b) & (a >= 0)
+    iu = jnp.triu(jnp.ones((width, width), bool), k=1)
+    return (eq & iu[None]).any((1, 2))
+
+
+@partial(jax.jit, static_argnames=("a_col", "b_col", "out_cap", "out_width"))
+def keyed_join(a: SortedSide, b_verts: jax.Array, b_count: jax.Array,
+               *, a_col: int, b_col: int, out_cap: int, out_width: int) -> PathSet:
+    """⊕ join: A rows (forward, last col = a_col) with B rows (backward,
+    last col = b_col) sharing the last vertex.
+
+    Output row = A[0..a_col] ++ reversed(B[0..b_col-1])   (B's join vertex
+    and direction folded away), so out length = a_col + b_col hops.
+    """
+    b_cap = b_verts.shape[0]
+    b_valid = jnp.arange(b_cap) < b_count
+    b_keys = jnp.where(b_valid, b_verts[:, b_col], jnp.int32(-7))  # never matches
+    lo = jnp.searchsorted(a.keys, b_keys, side="left")
+    hi = jnp.searchsorted(a.keys, b_keys, side="right")
+    cnt = (hi - lo) * b_valid
+    offs = jnp.cumsum(cnt)
+    total = offs[-1] if b_cap > 0 else jnp.int32(0)
+
+    i = jnp.arange(out_cap)
+    pair_valid = i < jnp.minimum(total, out_cap)
+    b_idx = jnp.searchsorted(offs, i, side="right")
+    b_idx = jnp.minimum(b_idx, b_cap - 1)
+    prev = jnp.where(b_idx > 0, offs[jnp.maximum(b_idx - 1, 0)], 0)
+    a_pos = lo[b_idx] + (i - prev)
+    a_pos = jnp.clip(a_pos, 0, a.verts.shape[0] - 1)
+
+    a_rows = a.verts[a_pos][:, :a_col + 1]                  # (out_cap, a_col+1)
+    b_rows = b_verts[b_idx][:, :b_col]                      # cols 0..b_col-1
+    b_rev = b_rows[:, ::-1]                                 # x_{b-1} ... x_1, t
+    assembled = jnp.full((out_cap, out_width), -1, jnp.int32)
+    assembled = assembled.at[:, :a_col + 1].set(a_rows)
+    assembled = assembled.at[:, a_col + 1:a_col + 1 + b_col].set(b_rev)
+    assembled = jnp.where(pair_valid[:, None], assembled, -1)
+
+    ok = pair_valid & ~_dup_mask(assembled, out_width)
+    out, n_out, ovf = compact_rows(ok, assembled, out_cap)
+    return PathSet(out, n_out, ovf | (total > out_cap))
+
+
+@partial(jax.jit, static_argnames=("p_col", "c_col", "out_cap", "out_width"))
+def cross_join(p_verts: jax.Array, p_count: jax.Array,
+               c_verts: jax.Array, c_count: jax.Array,
+               *, p_col: int, c_col: int, out_cap: int, out_width: int) -> PathSet:
+    """Splice join: every prefix (cols 0..p_col) × every cached child path
+    (cols 0..c_col; child path starts at the spliced vertex).
+
+    Output row = prefix ++ child, out length = (p_col) + 1 + c_col hops
+    counting the prefix->child edge.
+    """
+    i = jnp.arange(out_cap)
+    total = p_count * c_count
+    pair_valid = i < jnp.minimum(total, out_cap)
+    denom = jnp.maximum(c_count, 1)
+    p_idx = jnp.minimum(i // denom, jnp.maximum(p_count - 1, 0))
+    c_idx = jnp.minimum(i % denom, jnp.maximum(c_count - 1, 0))
+
+    p_rows = p_verts[p_idx][:, :p_col + 1]
+    c_rows = c_verts[c_idx][:, :c_col + 1]
+    assembled = jnp.full((out_cap, out_width), -1, jnp.int32)
+    assembled = assembled.at[:, :p_col + 1].set(p_rows)
+    assembled = assembled.at[:, p_col + 1:p_col + 2 + c_col].set(c_rows)
+    assembled = jnp.where(pair_valid[:, None], assembled, -1)
+
+    ok = pair_valid & ~_dup_mask(assembled, out_width)
+    out, n_out, ovf = compact_rows(ok, assembled, out_cap)
+    return PathSet(out, n_out, ovf | (total > out_cap))

@@ -1,0 +1,93 @@
+"""Static-shape path buffers (``PathSet``) and compaction utilities.
+
+A PathSet stores up to ``cap`` paths as a dense int32 matrix. The first
+``count`` rows are valid and packed at the front; unused cells are -1. All
+sizes are static so every consumer is jit-compilable; data-dependent sizes
+surface as (count, overflow) pairs that the host driver inspects.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["PathSet", "empty", "singleton", "compact_rows", "concat", "to_host"]
+
+
+class PathSet(NamedTuple):
+    verts: jax.Array    # (cap, L) int32, row i cols 0..length_i are vertices
+    count: jax.Array    # () int32 -- number of valid (packed) rows
+    overflow: jax.Array  # () bool -- True if rows were dropped to fit cap
+
+    @property
+    def cap(self) -> int:
+        return self.verts.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.verts.shape[1]
+
+
+def empty(cap: int, width: int) -> PathSet:
+    return PathSet(verts=jnp.full((cap, width), -1, jnp.int32),
+                   count=jnp.int32(0), overflow=jnp.bool_(False))
+
+
+def singleton(vertex, width: int) -> PathSet:
+    """PathSet holding the single length-0 path [vertex]."""
+    verts = jnp.full((1, width), -1, jnp.int32).at[0, 0].set(vertex)
+    return PathSet(verts=verts, count=jnp.int32(1), overflow=jnp.bool_(False))
+
+
+def compact_rows(mask: jax.Array, payload: jax.Array, out_cap: int,
+                 fill: int = -1) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Scatter payload rows where mask is True into a packed (out_cap, ...) buffer.
+
+    mask: (N,) bool; payload: (N, ...) -- returns (out, count, overflow).
+    Rows beyond out_cap are dropped (overflow=True).
+    """
+    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    total = jnp.where(mask.shape[0] > 0, pos[-1] + 1, 0).astype(jnp.int32)
+    dest = jnp.where(mask & (pos < out_cap), pos, out_cap)
+    out = jnp.full((out_cap + 1,) + payload.shape[1:], fill, payload.dtype)
+    out = out.at[dest].set(payload)
+    return out[:out_cap], jnp.minimum(total, out_cap), total > out_cap
+
+
+@jax.jit
+def _concat2(a_verts, a_count, b_verts, b_count):
+    cap = a_verts.shape[0] + b_verts.shape[0]
+    width = a_verts.shape[1]
+    out = jnp.full((cap, width), -1, jnp.int32)
+    out = jax.lax.dynamic_update_slice(out, a_verts, (0, 0))
+    # mask invalid rows of b before placing at offset a_count
+    bmask = jnp.arange(b_verts.shape[0])[:, None] < b_count
+    b = jnp.where(bmask, b_verts, -1)
+    shifted = jnp.full((cap, width), -1, jnp.int32)
+    shifted = jax.lax.dynamic_update_slice(shifted, b, (a_count, 0))
+    out = jnp.where(jnp.arange(cap)[:, None] < a_count, out, shifted)
+    return out, a_count + b_count
+
+
+def concat(sets: list[PathSet]) -> PathSet:
+    """Concatenate packed PathSets (same width) into one packed PathSet."""
+    sets = [s for s in sets if s is not None]
+    if not sets:
+        raise ValueError("concat of no PathSets")
+    if len(sets) == 1:
+        return sets[0]
+    acc = sets[0]
+    ov = sets[0].overflow
+    for s in sets[1:]:
+        verts, count = _concat2(acc.verts, acc.count, s.verts, s.count)
+        ov = ov | s.overflow
+        acc = PathSet(verts=verts, count=count, overflow=ov)
+    return acc
+
+
+def to_host(ps: PathSet) -> np.ndarray:
+    """Valid rows as a host numpy array (n, L)."""
+    n = int(ps.count)
+    return np.asarray(ps.verts[:n])

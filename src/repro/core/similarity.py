@@ -1,0 +1,70 @@
+"""Query similarity (Def 4.4/4.5) from hop-constrained neighborhoods.
+
+Γ(q) / Γ_r(q) are reusable by-products of the index BFS (Def 4.4 note): a
+vertex is in Γ(q) iff dist(q.s, v) <= q.k. We materialize them as boolean
+rows and compute all-pairs intersection sizes either as a chunked MXU
+matmul (jnp reference) or with the packed AND+popcount Pallas kernel.
+
+Def 4.5's printed formula has a stray ^{-1}; properties (1)-(3) and the
+zero-intersection footnote pin the intended quantity to a mean of the two
+directional *overlap coefficients*  i = |Γ_A ∩ Γ_B| / min(|Γ_A|, |Γ_B|).
+We use the arithmetic mean (the only reading consistent with the footnote's
+"the corresponding part ... is 0"), documented in DESIGN.md.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .index import QueryIndex
+
+__all__ = ["gamma_matrix", "intersection_matrix", "similarity_matrix"]
+
+
+def gamma_matrix(index: QueryIndex, reverse: bool = False) -> jax.Array:
+    """(Q, n) bool — Γ_r if reverse else Γ."""
+    ks = jnp.asarray(np.array([q[2] for q in index.queries], np.int8))
+    if reverse:
+        cols = index.dist_t[:-1, index.tgt_col]      # (n, Q)
+    else:
+        cols = index.dist_s[:-1, index.src_col]
+    return (cols <= ks[None, :]).T                   # (Q, n)
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def intersection_matrix(gam: jax.Array, chunk: int = 1 << 16) -> jax.Array:
+    """All-pairs |Γ_A ∩ Γ_B| via chunked f32 matmul on the MXU (ref path)."""
+    Q, n = gam.shape
+    out = jnp.zeros((Q, Q), jnp.float32)
+    for lo in range(0, n, chunk):
+        g = gam[:, lo:lo + chunk].astype(jnp.float32)
+        out = out + g @ g.T
+    return out.astype(jnp.int32)
+
+
+def similarity_matrix(index: QueryIndex, backend: str = "jnp") -> np.ndarray:
+    """(Q, Q) float64 μ matrix on host (diagonal = 1)."""
+    gf = gamma_matrix(index, reverse=False)
+    gr = gamma_matrix(index, reverse=True)
+    if backend == "pallas":
+        from ..kernels.pairwise_popcount import ops as ppops
+        inter_f = np.asarray(ppops.pairwise_intersections(gf))
+        inter_r = np.asarray(ppops.pairwise_intersections(gr))
+    else:
+        inter_f = np.asarray(intersection_matrix(gf))
+        inter_r = np.asarray(intersection_matrix(gr))
+    size_f = np.asarray(gf.sum(1)).astype(np.int64)
+    size_r = np.asarray(gr.sum(1)).astype(np.int64)
+
+    def overlap(inter, size):
+        mins = np.minimum(size[:, None], size[None, :]).astype(np.float64)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            i = np.where(mins > 0, inter / np.maximum(mins, 1), 0.0)
+        return np.where(inter > 0, i, 0.0)
+
+    mu = 0.5 * (overlap(inter_f, size_f) + overlap(inter_r, size_r))
+    np.fill_diagonal(mu, 1.0)
+    return mu

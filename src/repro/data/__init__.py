@@ -1,0 +1,1 @@
+from . import lm_data, gnn_data, recsys_data  # noqa: F401

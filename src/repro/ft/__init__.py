@@ -1,0 +1,5 @@
+from .driver import TrainDriver, DriverConfig, FailureInjector
+from .scheduler import WorkStealingScheduler
+
+__all__ = ["TrainDriver", "DriverConfig", "FailureInjector",
+           "WorkStealingScheduler"]

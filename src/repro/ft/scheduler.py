@@ -1,0 +1,105 @@
+"""Work-stealing cluster scheduler for batch query serving.
+
+Straggler mitigation for the paper's engine at pod scale: query *clusters*
+(the unit of sharing — a cluster's queries must stay together to reuse the
+sharing graph) are assigned to data-parallel replica groups by estimated
+cost; when a group runs dry it steals the largest pending cluster from the
+most loaded group. The queue is checkpointable so a group failure only
+loses its in-flight cluster, which returns to the queue (at-least-once;
+results are idempotent by query id).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import threading
+from pathlib import Path
+from typing import Callable, Optional
+
+__all__ = ["WorkStealingScheduler"]
+
+
+@dataclasses.dataclass
+class _Item:
+    cluster_id: int
+    queries: list
+    cost: float
+
+
+class WorkStealingScheduler:
+    def __init__(self, n_groups: int, cost_fn: Optional[Callable] = None):
+        self.n_groups = n_groups
+        self.cost_fn = cost_fn or (lambda qs: float(len(qs)))
+        self.queues: list[list[_Item]] = [[] for _ in range(n_groups)]
+        self.done: dict[int, object] = {}
+        self.in_flight: dict[int, _Item] = {}
+        self.steals = 0
+        self._lock = threading.Lock()
+
+    # -- planning ------------------------------------------------------
+    def submit(self, clusters: list[list]) -> None:
+        """Greedy longest-processing-time assignment of clusters to groups."""
+        items = [_Item(i, qs, self.cost_fn(qs)) for i, qs in enumerate(clusters)]
+        items.sort(key=lambda it: -it.cost)
+        loads = [0.0] * self.n_groups
+        for it in items:
+            g = loads.index(min(loads))
+            self.queues[g].append(it)
+            loads[g] += it.cost
+
+    # -- execution -----------------------------------------------------
+    def next_for(self, group: int) -> Optional[_Item]:
+        with self._lock:
+            if self.queues[group]:
+                it = self.queues[group].pop(0)
+            else:
+                victim = max(range(self.n_groups),
+                             key=lambda g: sum(i.cost for i in self.queues[g]))
+                if not self.queues[victim]:
+                    return None
+                it = self.queues[victim].pop()      # steal from the back
+                self.steals += 1
+            self.in_flight[it.cluster_id] = it
+            return it
+
+    def complete(self, cluster_id: int, result) -> None:
+        with self._lock:
+            self.in_flight.pop(cluster_id, None)
+            self.done[cluster_id] = result
+
+    def fail_group(self, group: int, lost_cluster_ids: list[int]) -> None:
+        """A replica group died: its in-flight clusters go back to the queue."""
+        with self._lock:
+            for cid in lost_cluster_ids:
+                it = self.in_flight.pop(cid, None)
+                if it is not None and cid not in self.done:
+                    target = min(range(self.n_groups),
+                                 key=lambda g: sum(i.cost for i in self.queues[g]))
+                    self.queues[target].append(it)
+
+    def pending(self) -> int:
+        with self._lock:
+            return sum(len(q) for q in self.queues) + len(self.in_flight)
+
+    # -- persistence (restart safety) ----------------------------------
+    def snapshot(self, path: str | Path) -> None:
+        with self._lock:
+            state = {"queues": [[(i.cluster_id, i.queries, i.cost)
+                                 for i in q] for q in self.queues],
+                     "in_flight": [(i.cluster_id, i.queries, i.cost)
+                                   for i in self.in_flight.values()],
+                     "done": sorted(self.done)}
+        Path(path).write_text(json.dumps(state))
+
+    @classmethod
+    def restore(cls, path: str | Path, n_groups: int) -> "WorkStealingScheduler":
+        state = json.loads(Path(path).read_text())
+        sched = cls(n_groups)
+        for g, q in enumerate(state["queues"]):
+            for cid, qs, cost in q:
+                sched.queues[g % n_groups].append(_Item(cid, qs, cost))
+        # in-flight work was lost with the crash: requeue it
+        for cid, qs, cost in state["in_flight"]:
+            sched.queues[0].append(_Item(cid, qs, cost))
+        sched.done = dict.fromkeys(state["done"])
+        return sched

@@ -1,0 +1,22 @@
+"""Pallas TPU kernels for the engine's compute hot spots.
+
+Each kernel package ships three modules:
+  kernel.py -- pl.pallas_call body + BlockSpec tiling (TPU target)
+  ops.py    -- jit'd public wrapper with backend switch ("pallas" |
+               "interpret" | "jnp"); models/engine call these
+  ref.py    -- pure-jnp oracle used for validation and as the jnp backend
+
+This container is CPU-only: tests validate kernel bodies with
+interpret=True against ref.py across shape/dtype sweeps; the dry-run
+lowers the jnp backend (kernels cannot lower for the CPU backend), and the
+BlockSpecs document the VMEM tiling used on real TPU.
+"""
+DEFAULT_BACKEND = "jnp"
+
+
+def resolve_backend(backend):
+    import jax
+    if backend is not None:
+        return backend
+    platform = jax.default_backend()
+    return "pallas" if platform == "tpu" else DEFAULT_BACKEND

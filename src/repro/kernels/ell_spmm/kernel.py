@@ -1,0 +1,69 @@
+"""Pallas kernel: padded-ELL SpMM (gather-reduce message passing).
+
+    out[v, f] = reduce_d  X[ell_idx[v, d], f]        (sum or max)
+
+The GNN-substrate hot spot (GraphSAGE/MeshGraphNet/GraphCast aggregation)
+and the float cousin of the MS-BFS OR-gather: JAX has no CSR SpMM (BCOO
+only), so message passing is built from this regular gather-reduce over the
+degree-padded ELL adjacency -- MXU-free but perfectly vectorized gathers,
+the TPU-native replacement for CUDA scatter-atomics.
+
+Tiling: grid = (row blocks, feature blocks); feature tile of the *full*
+source matrix X (V+1, BF) resident in VMEM (launcher shards vertices to
+keep (V_shard+1)*BF*4B within budget, e.g. 64k rows x 128 feats = 32 MB ->
+shard to 16k rows = 8 MB), ELL tile (BV, D) streams.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["ell_spmm_pallas"]
+
+
+def _make_kernel(op: str):
+    def _kernel(idx_ref, x_ref, out_ref):
+        idx = idx_ref[...]                    # (BV, D)
+        x = x_ref[...]                        # (V+1, BF); row V is neutral
+        D = idx.shape[1]
+
+        def body(d, acc):
+            rows = jax.lax.dynamic_index_in_dim(idx, d, axis=1, keepdims=False)
+            g = x[rows]
+            return acc + g if op == "sum" else jnp.maximum(acc, g)
+
+        if op == "sum":
+            init = jnp.zeros(out_ref.shape, x.dtype)
+        else:
+            init = jnp.full(out_ref.shape, -jnp.inf, x.dtype)
+        out_ref[...] = jax.lax.fori_loop(0, D, body, init)
+    return _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("op", "block_v", "block_f", "interpret"))
+def ell_spmm_pallas(ell_idx: jax.Array, x: jax.Array, *, op: str = "sum",
+                    block_v: int = 256, block_f: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """ell_idx: (V, D) int32 pad=V; x: (V+1, F) float (row V = neutral elt).
+
+    Returns (V, F) aggregated features.
+    """
+    V, D = ell_idx.shape
+    F = x.shape[1]
+    bv = min(block_v, V)
+    bf = min(block_f, F)
+    grid = (pl.cdiv(V, bv), pl.cdiv(F, bf))
+    return pl.pallas_call(
+        _make_kernel(op),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bv, D), lambda i, j: (i, 0)),
+            pl.BlockSpec((V + 1, bf), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bv, bf), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((V, F), x.dtype),
+        interpret=interpret,
+    )(ell_idx, x)

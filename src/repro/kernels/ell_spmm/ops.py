@@ -1,0 +1,32 @@
+"""Public wrapper: neighbor aggregation over padded ELL with backend switch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import resolve_backend
+from .kernel import ell_spmm_pallas
+from .ref import ell_spmm_ref
+
+__all__ = ["ell_aggregate"]
+
+
+def ell_aggregate(ell_idx: jax.Array, x: jax.Array, op: str = "sum",
+                  backend: str | None = None) -> jax.Array:
+    """x: (V, F) node features -> (V, F) aggregated over out-neighbors.
+
+    Appends the neutral sentinel row internally (pad index = V).
+    """
+    neutral = jnp.zeros((1, x.shape[1]), x.dtype) if op == "sum" else \
+        jnp.full((1, x.shape[1]), -jnp.inf, x.dtype)
+    xs = jnp.concatenate([x, neutral], axis=0)
+    backend = resolve_backend(backend)
+    if backend == "pallas":
+        out = ell_spmm_pallas(ell_idx, xs, op=op)
+    elif backend == "interpret":
+        out = ell_spmm_pallas(ell_idx, xs, op=op, interpret=True)
+    else:
+        out = ell_spmm_ref(ell_idx, xs, op=op)
+    if op == "max":
+        out = jnp.where(jnp.isfinite(out), out, 0.0)
+    return out

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for padded-ELL SpMM."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ell_spmm_ref"]
+
+
+def ell_spmm_ref(ell_idx: jax.Array, x: jax.Array, op: str = "sum") -> jax.Array:
+    g = x[ell_idx]                          # (V, D, F); sentinel row is neutral
+    if op == "sum":
+        return jnp.sum(g, axis=1)
+    return jnp.max(g, axis=1)

@@ -1,0 +1,102 @@
+"""Pallas kernel: blocked causal GQA attention (FlashAttention-2 schedule).
+
+LM-substrate hot spot for the assigned transformer architectures. Online
+softmax over KV blocks -- the (S, S) score matrix is never materialized:
+
+  for each (batch*q_head, q block):
+      m, l, acc = -inf, 0, 0
+      for kv block:                            # fori_loop, VMEM-resident KV
+          s = q @ k^T * scale  (+ causal mask)
+          m' = max(m, rowmax(s)); p = exp(s - m')
+          acc = acc * exp(m - m') + p @ v; l = l * exp(m - m') + rowsum(p)
+      out = acc / l
+
+GQA: q-head h reads kv-head h // (Hq // Hkv); the kernel receives K/V
+already indexed per q-head group so the BlockSpec stays rectangular.
+
+Tiling: grid = (B * Hq, nQ). Per program: Q tile (BQ, Dh), K/V slices
+(S, Dh) VMEM-resident (decode/serve shapes shard S across devices first;
+for 32k x 128 x 2 x 4B = 32 MB the launcher splits the KV axis, this
+kernel sees the local shard). MXU-aligned: BQ, Dh multiples of 128 where
+possible.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def _make_kernel(block_k: int, causal: bool, scale: float, q_offset: int):
+    def _kernel(q_ref, k_ref, v_ref, o_ref):
+        q = q_ref[...][0]                      # (BQ, Dh)
+        S = k_ref.shape[1]
+        BQ, Dh = q.shape
+        q_blk = pl.program_id(1)
+        q_off = q_blk * BQ
+        nk = pl.cdiv(S, block_k)
+
+        def body(kb, carry):
+            acc, m, l = carry
+            k = jax.lax.dynamic_slice(k_ref[...][0], (kb * block_k, 0),
+                                      (block_k, Dh))
+            v = jax.lax.dynamic_slice(v_ref[...][0], (kb * block_k, 0),
+                                      (block_k, Dh))
+            s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+            kv_pos = kb * block_k + jnp.arange(block_k)
+            mask = kv_pos[None, :] < S
+            if causal:
+                # q_offset aligns decode-style queries (Sq < Skv) to the
+                # tail of the KV axis, matching the reference.
+                q_pos = q_off + jnp.arange(BQ) + q_offset
+                mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=1))
+            p = jnp.exp(s - m_new[:, None])
+            alpha = jnp.exp(m - m_new)
+            acc = acc * alpha[:, None] + jnp.dot(
+                p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+            l = l * alpha + jnp.sum(p, axis=1)
+            return acc, m_new, l
+
+        acc0 = jnp.zeros((BQ, Dh), jnp.float32)
+        m0 = jnp.full((BQ,), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((BQ,), jnp.float32)
+        acc, m, l = jax.lax.fori_loop(0, nk, body, (acc0, m0, l0))
+        out = acc / jnp.maximum(l, 1e-30)[:, None]
+        o_ref[...] = out[None].astype(o_ref.dtype)
+    return _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           *, causal: bool = True, block_q: int = 128,
+                           block_k: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """q: (BH, Sq, Dh); k, v: (BH, Skv, Dh) -- kv already per-q-head (GQA
+    expansion done by the wrapper). Returns (BH, Sq, Dh).
+    """
+    BH, Sq, Dh = q.shape
+    Skv = k.shape[1]
+    bq = min(block_q, Sq)
+    scale = 1.0 / (Dh ** 0.5)
+    grid = (BH, pl.cdiv(Sq, bq))
+    return pl.pallas_call(
+        _make_kernel(min(block_k, Skv), causal, scale, Skv - Sq),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, Dh), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, Skv, Dh), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, Skv, Dh), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, Dh), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, Dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

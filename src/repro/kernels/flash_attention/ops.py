@@ -1,0 +1,40 @@
+"""Public wrapper: GQA attention with backend switch.
+
+Handles the GQA head expansion (q heads grouped onto kv heads) and the
+(B, S, H, D) <-> (BH, S, D) layout so model code stays simple.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import resolve_backend
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+__all__ = ["gqa_attention"]
+
+
+def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True, backend: str | None = None) -> jax.Array:
+    """q: (B, Sq, Hq, Dh); k, v: (B, Skv, Hkv, Dh), Hq % Hkv == 0.
+
+    Returns (B, Sq, Hq, Dh).
+    """
+    B, Sq, Hq, Dh = q.shape
+    Hkv = k.shape[2]
+    group = Hq // Hkv
+    # expand kv heads to q heads (cheap views; XLA keeps them fused)
+    k = jnp.repeat(k, group, axis=2)
+    v = jnp.repeat(v, group, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, Dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hq, -1, Dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hq, -1, Dh)
+    backend = resolve_backend(backend)
+    if backend == "pallas":
+        out = flash_attention_pallas(qf, kf, vf, causal=causal)
+    elif backend == "interpret":
+        out = flash_attention_pallas(qf, kf, vf, causal=causal, interpret=True)
+    else:
+        out = attention_ref(qf, kf, vf, causal=causal)
+    return out.reshape(B, Hq, Sq, Dh).transpose(0, 2, 1, 3)

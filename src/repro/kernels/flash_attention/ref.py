@@ -1,0 +1,22 @@
+"""Pure-jnp oracle: exact softmax attention (materializes scores)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True) -> jax.Array:
+    """q: (BH, Sq, Dh); k, v: (BH, Skv, Dh)."""
+    Dh = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (Dh ** 0.5)
+    if causal:
+        Sq, Skv = q.shape[1], k.shape[1]
+        qpos = jnp.arange(Sq)[:, None] + (Skv - Sq)  # decode offset alignment
+        mask = jnp.arange(Skv)[None, :] <= qpos
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,29 @@
+"""Public wrapper: one bit-packed MS-BFS hop with backend switch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import resolve_backend
+from .kernel import msbfs_expand_pallas
+from .ref import msbfs_expand_ref, pack_bits, unpack_bits
+
+__all__ = ["msbfs_hop_packed", "pack_bits", "unpack_bits"]
+
+
+def msbfs_hop_packed(ell_idx: jax.Array, frontier_words: jax.Array,
+                     backend: str | None = None) -> jax.Array:
+    """frontier_words: (V+1, W) uint32 with sentinel row V zeroed.
+
+    Returns (V+1, W) next frontier (sentinel row re-zeroed).
+    """
+    backend = resolve_backend(backend)
+    fw = frontier_words.at[-1].set(jnp.uint32(0))
+    if backend == "pallas":
+        nxt = msbfs_expand_pallas(ell_idx, fw)
+    elif backend == "interpret":
+        nxt = msbfs_expand_pallas(ell_idx, fw, interpret=True)
+    else:
+        nxt = msbfs_expand_ref(ell_idx, fw)
+    zero = jnp.zeros((1, nxt.shape[1]), jnp.uint32)
+    return jnp.concatenate([nxt, zero], axis=0)

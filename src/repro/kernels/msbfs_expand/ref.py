@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the bit-packed MS-BFS expansion + pack/unpack helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["msbfs_expand_ref", "pack_bits", "unpack_bits"]
+
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """(V, S) bool -> (V, ceil(S/32)) uint32 (little-endian within a word)."""
+    V, S = bits.shape
+    W = -(-S // 32)
+    pad = W * 32 - S
+    b = jnp.pad(bits.astype(jnp.uint32), ((0, 0), (0, pad)))
+    b = b.reshape(V, W, 32)
+    powers = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(b * powers[None, None, :], axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(words: jax.Array, S: int) -> jax.Array:
+    """(V, W) uint32 -> (V, S) bool."""
+    V, W = words.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    return bits.reshape(V, W * 32)[:, :S].astype(bool)
+
+
+def msbfs_expand_ref(ell_idx: jax.Array, frontier: jax.Array) -> jax.Array:
+    """OR-gather over padded ELL rows: next[v, w] = OR_d frontier[idx[v,d], w]."""
+    gathered = frontier[ell_idx]               # (V, D, W)
+    return jax.lax.reduce(gathered, jnp.uint32(0), jax.lax.bitwise_or, (1,))

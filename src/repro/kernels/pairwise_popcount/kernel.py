@@ -1,0 +1,57 @@
+"""Pallas kernel: all-pairs popcount(AND) over packed bitmaps.
+
+    out[i, j] = sum_w popcount(a[i, w] & a[j, w])
+
+This is the query-similarity hot spot (Def 4.5): |Γ(q_A) ∩ Γ(q_B)| for all
+query pairs. Hash-set intersection (the paper's CPU form) becomes a dense
+bit-parallel reduction: 32 vertices per word, VPU popcount, O(Q² · V/32).
+
+Tiling: grid = (i blocks, j blocks, word blocks); each program accumulates
+a (BQ, BQ) int32 tile over its word slice. VMEM per program:
+2 * BQ * BW * 4B + BQ² * 4B (e.g. BQ=128, BW=512 -> 0.5 MB + 64 KB).
+The word axis is innermost so the output tile stays resident.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["pairwise_popcount_pallas"]
+
+
+def _kernel(a_ref, b_ref, out_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a = a_ref[...]                            # (BQ, BW) uint32
+    b = b_ref[...]                            # (BQ, BW) uint32
+    inter = jax.lax.population_count(a[:, None, :] & b[None, :, :])
+    out_ref[...] += jnp.sum(inter.astype(jnp.int32), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_w", "interpret"))
+def pairwise_popcount_pallas(words: jax.Array, *, block_q: int = 128,
+                             block_w: int = 512,
+                             interpret: bool = False) -> jax.Array:
+    """words: (Q, W) uint32 packed bitmaps -> (Q, Q) int32 intersections."""
+    Q, W = words.shape
+    bq = min(block_q, Q)
+    bw = min(block_w, W)
+    grid = (pl.cdiv(Q, bq), pl.cdiv(Q, bq), pl.cdiv(W, bw))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, bw), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bq, bw), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bq, bq), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Q, Q), jnp.int32),
+        interpret=interpret,
+    )(words, words)

@@ -1,0 +1,23 @@
+"""Public wrapper: all-pairs |Γ_A ∩ Γ_B| from boolean reachability rows."""
+from __future__ import annotations
+
+import jax
+
+from .. import resolve_backend
+from ..msbfs_expand.ref import pack_bits
+from .kernel import pairwise_popcount_pallas
+from .ref import pairwise_popcount_ref, intersections_bool_ref
+
+__all__ = ["pairwise_intersections"]
+
+
+def pairwise_intersections(gamma_bits: jax.Array,
+                           backend: str | None = None) -> jax.Array:
+    """gamma_bits: (Q, V) bool -> (Q, Q) int32 intersection sizes."""
+    backend = resolve_backend(backend)
+    if backend == "jnp":
+        return intersections_bool_ref(gamma_bits)
+    words = pack_bits(gamma_bits)
+    if backend == "pallas":
+        return pairwise_popcount_pallas(words)
+    return pairwise_popcount_pallas(words, interpret=True)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for pairwise popcount intersections."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["pairwise_popcount_ref", "intersections_bool_ref"]
+
+
+def pairwise_popcount_ref(words: jax.Array) -> jax.Array:
+    """(Q, W) uint32 -> (Q, Q) int32 via popcount(AND)."""
+    inter = jax.lax.population_count(words[:, None, :] & words[None, :, :])
+    return jnp.sum(inter.astype(jnp.int32), axis=-1)
+
+
+def intersections_bool_ref(bits: jax.Array, chunk: int = 1 << 16) -> jax.Array:
+    """(Q, V) bool -> (Q, Q) int32 via chunked MXU matmul."""
+    Q, V = bits.shape
+    out = jnp.zeros((Q, Q), jnp.float32)
+    for lo in range(0, V, chunk):
+        g = bits[:, lo:lo + chunk].astype(jnp.float32)
+        out = out + g @ g.T
+    return out.astype(jnp.int32)

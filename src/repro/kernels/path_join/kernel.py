@@ -1,0 +1,57 @@
+"""Pallas kernel: path-pair overlap counting for the ⊕ join (Def 3.1).
+
+    overlap[i, j] = #{ (p, q) : A[i, p] == B[j, q], A[i, p] >= 0 }
+
+The enumeration hot spot (Fig 3c: join/scan dominates): joining forward and
+backward half-paths requires, for every candidate pair, the simple-path
+check "do the two halves share a vertex?". On CPU that is a hash probe per
+pair; here it is a dense (BA, BB, LA, LB) equality reduction — regular,
+vectorizable, and tiny in the L dimensions (L <= 9), so the VPU runs it at
+full tilt. The wrapper derives join validity:
+
+  keyed join  : valid = key match (last cols) & overlap == 1 (join vertex only)
+  splice join : valid = overlap == 0 (prefix vs cached suffix are disjoint)
+
+Tiling: grid = (A blocks, B blocks); each program owns a (BA, BB) int32
+tile; A tile (BA, LA) and B tile (BB, LB) are VMEM-resident
+(BA=BB=256, L=9 -> ~18 KB in, 256 KB out).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["path_overlap_pallas"]
+
+
+def _kernel(a_ref, b_ref, out_ref):
+    a = a_ref[...]                            # (BA, LA) int32
+    b = b_ref[...]                            # (BB, LB) int32
+    eq = (a[:, None, :, None] == b[None, :, None, :]) & (a >= 0)[:, None, :, None]
+    out_ref[...] = jnp.sum(eq.astype(jnp.int32), axis=(2, 3))
+
+
+@functools.partial(jax.jit, static_argnames=("block_a", "block_b", "interpret"))
+def path_overlap_pallas(a_verts: jax.Array, b_verts: jax.Array,
+                        *, block_a: int = 256, block_b: int = 256,
+                        interpret: bool = False) -> jax.Array:
+    """a_verts: (NA, LA), b_verts: (NB, LB) int32 (pad -1) -> (NA, NB) int32."""
+    NA, LA = a_verts.shape
+    NB, LB = b_verts.shape
+    ba = min(block_a, NA)
+    bb = min(block_b, NB)
+    grid = (pl.cdiv(NA, ba), pl.cdiv(NB, bb))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ba, LA), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, LB), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((ba, bb), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((NA, NB), jnp.int32),
+        interpret=interpret,
+    )(a_verts, b_verts)

@@ -1,0 +1,39 @@
+"""Public wrapper: join-validity matrices for ⊕ and splice joins."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import resolve_backend
+from .kernel import path_overlap_pallas
+from .ref import path_overlap_ref
+
+__all__ = ["path_overlap", "keyed_join_valid", "splice_join_valid"]
+
+
+def path_overlap(a_verts: jax.Array, b_verts: jax.Array,
+                 backend: str | None = None) -> jax.Array:
+    backend = resolve_backend(backend)
+    if backend == "pallas":
+        return path_overlap_pallas(a_verts, b_verts)
+    if backend == "interpret":
+        return path_overlap_pallas(a_verts, b_verts, interpret=True)
+    return path_overlap_ref(a_verts, b_verts)
+
+
+def keyed_join_valid(a_verts: jax.Array, a_col: int, b_verts: jax.Array,
+                     b_col: int, backend: str | None = None) -> jax.Array:
+    """(NA, NB) bool: last vertices match and it is the only shared vertex."""
+    ov = path_overlap(a_verts[:, :a_col + 1], b_verts[:, :b_col + 1], backend)
+    key = a_verts[:, a_col][:, None] == b_verts[:, b_col][None, :]
+    key &= (a_verts[:, a_col] >= 0)[:, None]
+    return key & (ov == 1)
+
+
+def splice_join_valid(p_verts: jax.Array, p_col: int, c_verts: jax.Array,
+                      c_col: int, backend: str | None = None) -> jax.Array:
+    """(NP, NC) bool: prefix and cached suffix share no vertex."""
+    ov = path_overlap(p_verts[:, :p_col + 1], c_verts[:, :c_col + 1], backend)
+    valid_p = (p_verts[:, 0] >= 0)[:, None]
+    valid_c = (c_verts[:, 0] >= 0)[None, :]
+    return (ov == 0) & valid_p & valid_c

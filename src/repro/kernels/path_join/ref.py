@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for path-pair overlap counts."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["path_overlap_ref"]
+
+
+def path_overlap_ref(a_verts: jax.Array, b_verts: jax.Array) -> jax.Array:
+    eq = (a_verts[:, None, :, None] == b_verts[None, :, None, :])
+    eq = eq & (a_verts >= 0)[:, None, :, None]
+    return jnp.sum(eq.astype(jnp.int32), axis=(2, 3))

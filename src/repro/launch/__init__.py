@@ -1,0 +1,4 @@
+# Launchers: mesh.py (topologies), steps.py (step builder), dryrun.py
+# (multi-pod compile validation), train.py / serve.py (drivers),
+# roofline.py (perf analysis). dryrun must be run as __main__ (it sets
+# XLA_FLAGS); never import it from tests.

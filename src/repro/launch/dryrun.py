@@ -1,0 +1,196 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, capture memory_analysis / cost_analysis / collective
+census for the roofline.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b \
+        --shape train_4k --mesh pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+        --out results/dryrun
+
+The XLA_FLAGS line above MUST run before any other import (jax locks the
+device count at first init); smoke tests and benchmarks never import this
+module, so they see the real single CPU device.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from .mesh import mesh_by_name
+from .steps import build_bundle
+from .hlo_analysis import analyze_hlo
+from ..config import RunOptions
+from ..models.sharding import Rules
+from .. import configs as config_registry
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\b")
+
+
+# per-cell launch options (memory plans; justified in EXPERIMENTS.md §Dry-run)
+CELL_OPTS: dict[tuple, dict] = {
+    ("qwen1.5-110b", "train_4k"): {"grad_accum": 4},
+    ("qwen2.5-14b", "train_4k"): {"grad_accum": 2},
+    ("moonshot-v1-16b-a3b", "train_4k"): {"grad_accum": 2},
+    ("olmoe-1b-7b", "train_4k"): {"grad_accum": 2},
+}
+
+
+def dryrun_cell(arch: str, shape: str, mesh_name: str,
+                opts: RunOptions | None = None) -> dict:
+    """Lower + compile one cell; returns the roofline record."""
+    if opts is None:
+        import dataclasses as _dc
+        opts = RunOptions(**CELL_OPTS.get((arch, shape), {}))
+    mesh = mesh_by_name(mesh_name)
+    rules = Rules(mesh)
+    t0 = time.perf_counter()
+    bundle = build_bundle(arch, shape, rules, opts)
+    jitted = jax.jit(bundle.step_fn,
+                     in_shardings=bundle.in_shardings,
+                     out_shardings=bundle.out_shardings,
+                     donate_argnums=bundle.donate_argnums)
+    with jax.set_mesh(mesh):
+        lowered = jitted.lower(*bundle.abstract_inputs)
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    census = collective_census(hlo)
+    hlo_est = analyze_hlo(hlo)
+    rec = {
+        "arch": arch, "shape": shape, "mesh": mesh_name,
+        "n_devices": mesh.devices.size,
+        "t_lower_s": round(t_lower, 2), "t_compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_device_bytes": mem.argument_size_in_bytes
+                                 + mem.output_size_in_bytes
+                                 + mem.temp_size_in_bytes
+                                 - mem.alias_size_in_bytes,
+        },
+        "cost_analysis": {k: cost.get(k) for k in
+                          ("flops", "bytes accessed", "transcendentals")},
+        "collectives": census,
+        "hlo_flops_est": hlo_est["flops_per_device"],
+        "collective_bytes_est": hlo_est["collective_bytes_per_device"],
+        "collective_by_kind": hlo_est["collective_by_kind"],
+        "meta": bundle.meta,
+        "ok": True,
+    }
+    return rec
+
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1}
+SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|pred)"
+                      r"\[([0-9,]*)\]")
+
+
+def _first_shape_bytes(line: str) -> int:
+    """Bytes of the op's result shape(s) on an HLO text line (lhs of =)."""
+    lhs = line.split("=")[0] if "=" in line else line
+    total = 0
+    for m in SHAPE_RE.finditer(lhs):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_census(hlo: str) -> dict:
+    """Per-collective op counts and result bytes, split by computation so
+    while-body (scan) collectives can be trip-count-adjusted downstream."""
+    comps: dict[str, dict] = {}
+    cur = "_entry"
+    trip_re = re.compile(r"trip_count=(\d+)")
+    known_trips: dict[str, int] = {}
+    for line in hlo.splitlines():
+        ls = line.strip()
+        if ls.startswith("%") or ls.startswith("ENTRY"):
+            if "{" in ls and ("(" in ls):
+                name = ls.split()[0].lstrip("%")
+                cur = name
+        m = COLLECTIVE_RE.search(ls)
+        if m and "=" in ls and not ls.startswith("ROOT tuple"):
+            kind = m.group(1)
+            if "-done" in ls and "-start" not in ls.split("=")[1][:40]:
+                continue  # count the -start only
+            by = comps.setdefault(cur, {})
+            ent = by.setdefault(kind, {"count": 0, "bytes": 0})
+            ent["count"] += 1
+            ent["bytes"] += _first_shape_bytes(ls)
+        tm = trip_re.search(ls)
+        if tm and "while" in ls:
+            known_trips[cur] = int(tm.group(1))
+    return {"per_computation": comps, "trip_counts": known_trips}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--print-hlo", action="store_true")
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for arch in config_registry.ARCHS:
+            for shape in config_registry.shapes_for(arch):
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    n_fail = 0
+    for arch, shape in cells:
+        for mesh_name in meshes:
+            tag = f"{arch}__{shape}__{mesh_name}"
+            path = outdir / f"{tag}.json"
+            try:
+                rec = dryrun_cell(arch, shape, mesh_name)
+                per_dev_gb = rec["memory"]["peak_device_bytes"] / 2**30
+                print(f"[OK]   {tag}: compile {rec['t_compile_s']}s, "
+                      f"peak/device {per_dev_gb:.2f} GiB, "
+                      f"flops/device {rec['cost_analysis']['flops']:.3g}")
+            except Exception as e:  # noqa: BLE001
+                rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                       "ok": False, "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]}
+                n_fail += 1
+                print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+            path.write_text(json.dumps(rec, indent=1, default=str))
+    print(f"\n{len(cells) * len(meshes) - n_fail}/{len(cells) * len(meshes)} "
+          f"cells compiled")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,164 @@
+"""HLO text analysis: trip-adjusted FLOPs and collective traffic.
+
+XLA's cost_analysis() counts while (scan) bodies once; this module parses
+the scheduled HLO, builds the computation call graph (fusions via
+``calls=``, reductions via ``to_apply=``, loops via ``body=`` with
+``backend_config known_trip_count``), counts dot FLOPs and collective
+bytes per computation, and folds totals through the call graph with loop
+multipliers. All figures are per device (SPMD module).
+
+Collective traffic per op = max(result bytes, sum of operand bytes)
+(covers both all-gather — big result — and reduce-scatter — big operand).
+"""
+from __future__ import annotations
+
+import json
+import re
+
+__all__ = ["analyze_hlo"]
+
+DT = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+      "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+      "c64": 8, "c128": 16}
+_SHAPE = re.compile(r"\b(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)"
+                    r"\[([0-9,]*)\]")
+_COLL = re.compile(r"= \(?[\w\[\],{}/* ]*?\b"
+                   r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                   r"collective-permute)\(")
+_OP = re.compile(r"^(?:ROOT )?%([\w.\-]+) = (.+)$")
+_TRIP = re.compile(r'known_trip_count\D+(\d+)')
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE.finditer(text):
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * DT[m.group(1)]
+    return total
+
+
+def _result_part(rhs: str) -> str:
+    """The result type prefix of an op line (before the op name + '(')."""
+    i = rhs.find("(")
+    return rhs[:i] if i > 0 else rhs
+
+
+def analyze_hlo(hlo: str) -> dict:
+    # ---- split computations
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        if not line:
+            continue
+        if not line.startswith(" "):
+            m = re.match(r"^(?:ENTRY )?%([\w.\-]+) ", line)
+            if m and "{" in line:
+                cur = m.group(1)
+                comps[cur] = []
+                if line.startswith("ENTRY"):
+                    comps["__entry__"] = comps[cur]
+                    entry_name = cur
+            continue
+        if cur is not None:
+            comps[cur].append(line.strip())
+
+    entry = None
+    for name in comps:
+        if comps[name] is comps.get("__entry__") and name != "__entry__":
+            entry = name
+    comps.pop("__entry__", None)
+
+    flops: dict[str, float] = {}
+    coll: dict[str, dict[str, float]] = {}
+    children: dict[str, list[tuple[str, float]]] = {}
+
+    for name, lines in comps.items():
+        shapes: dict[str, str] = {}
+        f = 0.0
+        cl: dict[str, float] = {}
+        ch: list[tuple[str, float]] = []
+        for ln in lines:
+            om = _OP.match(ln)
+            if not om:
+                continue
+            sym, rhs = om.group(1), om.group(2)
+            shapes[sym] = _result_part(rhs)
+            # --- dot flops
+            if " dot(" in ln or rhs.startswith("dot("):
+                out_b = _SHAPE.findall(_result_part(rhs))
+                out_n = 1
+                for dt_, dims in out_b:
+                    nn = 1
+                    for d in dims.split(","):
+                        if d:
+                            nn *= int(d)
+                    out_n *= nn if out_n == 1 else 1
+                lhs_c = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ln)
+                ops = re.search(r"dot\(([^)]*)\)", ln)
+                contract = 1
+                if lhs_c and ops and lhs_c.group(1):
+                    lhs_sym = ops.group(1).split(",")[0].strip().lstrip("%")
+                    sm = _SHAPE.search(shapes.get(lhs_sym, ""))
+                    if sm:
+                        ldims = sm.group(2).split(",")
+                        for ci in lhs_c.group(1).split(","):
+                            if ci and int(ci) < len(ldims) and ldims[int(ci)]:
+                                contract *= int(ldims[int(ci)])
+                f += 2.0 * out_n * contract
+            # --- collectives
+            cm = _COLL.search(ln)
+            if cm:
+                kind = cm.group(1)
+                res_b = _shape_bytes(_result_part(rhs))
+                opm = re.search(r"\(([^)]*)\)", rhs[rhs.find("("):])
+                op_b = 0
+                if opm:
+                    for o in opm.group(1).split(","):
+                        o = o.strip().lstrip("%")
+                        op_b += _shape_bytes(shapes.get(o, ""))
+                cl[kind] = cl.get(kind, 0.0) + max(res_b, op_b)
+            # --- calls
+            if " while(" in ln:
+                bm = re.search(r"body=%([\w.\-]+)", ln)
+                tm = _TRIP.search(ln)
+                trip = float(tm.group(1)) if tm else 1.0
+                if bm:
+                    ch.append((bm.group(1), trip))
+            else:
+                for pat in (r"calls=%([\w.\-]+)", r"to_apply=%([\w.\-]+)",
+                            r"condition=%([\w.\-]+)"):
+                    for mm in re.finditer(pat, ln):
+                        ch.append((mm.group(1), 1.0))
+        flops[name] = f
+        coll[name] = cl
+        children[name] = ch
+
+    memo_f: dict[str, float] = {}
+    memo_c: dict[str, dict[str, float]] = {}
+
+    def fold(name: str, depth=0):
+        if name in memo_f or depth > 64 or name not in comps:
+            return memo_f.get(name, 0.0), memo_c.get(name, {})
+        tf = flops.get(name, 0.0)
+        tc = dict(coll.get(name, {}))
+        for callee, mult in children.get(name, []):
+            if callee == name:
+                continue
+            cf, cc = fold(callee, depth + 1)
+            tf += mult * cf
+            for k, v in cc.items():
+                tc[k] = tc.get(k, 0.0) + mult * v
+        memo_f[name] = tf
+        memo_c[name] = tc
+        return tf, tc
+
+    tf, tc = fold(entry) if entry else (sum(flops.values()), {})
+    return {
+        "flops_per_device": tf,
+        "collective_bytes_per_device": sum(tc.values()),
+        "collective_by_kind": {k: v for k, v in sorted(tc.items())},
+        "entry": entry,
+    }

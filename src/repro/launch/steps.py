@@ -1,0 +1,535 @@
+"""Step builder: (arch, shape, mesh rules) -> jit-able step + abstract inputs
++ shardings + analytic roofline meta.
+
+Single source of truth consumed by the dry-run (ShapeDtypeStruct lowering),
+the train/serve drivers (real arrays) and the smoke tests (reduced configs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..config import (GNNConfig, LMConfig, PathEngineConfig, RecsysConfig,
+                      RunOptions, ShapeSpec)
+from ..models import gnn, recsys, transformer
+from ..models.sharding import Rules
+from ..optim import adamw_init, adamw_update, cosine_schedule
+from .. import configs as config_registry
+
+__all__ = ["StepBundle", "build_bundle"]
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+@dataclasses.dataclass
+class StepBundle:
+    arch: str
+    shape: str
+    step_fn: Callable
+    abstract_inputs: tuple          # positional args as ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: Any
+    meta: dict                      # analytic roofline terms (see roofline.py)
+    make_concrete: Optional[Callable] = None  # () -> real input arrays (tests)
+    donate_argnums: tuple = ()      # aliased in/out buffers (params/opt/cache)
+
+
+def _constrain_fn(rules: Rules):
+    def constrain(x, axes):
+        return jax.lax.with_sharding_constraint(x, rules.sharding(*axes))
+    return constrain
+
+
+def _spec_tree(rules: Rules, logical_tree):
+    return jax.tree.map(
+        lambda axes: rules.sharding(*axes), logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))
+
+
+def _abstract(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def build_bundle(arch: str, shape_name: str, rules: Rules,
+                 opts: RunOptions = RunOptions(), reduced: bool = False,
+                 overrides: dict | None = None) -> StepBundle:
+    mod = config_registry.get(arch)
+    cfg = mod.REDUCED if reduced else mod.CONFIG
+    shape = mod.SHAPES[shape_name]
+    if overrides:
+        shape = ShapeSpec(shape.name, shape.kind,
+                          tuple(dict(dict(shape.dims), **overrides).items()))
+    fam = mod.FAMILY
+    if fam == "lm":
+        return _lm_bundle(arch, cfg, shape, rules, opts)
+    if fam == "gnn":
+        return _gnn_bundle(arch, cfg, shape, rules, opts)
+    if fam == "recsys":
+        return _recsys_bundle(arch, cfg, shape, rules, opts)
+    if fam == "engine":
+        return _engine_bundle(arch, cfg, shape, rules, opts)
+    raise ValueError(fam)
+
+
+# ======================================================================
+# LM family
+# ======================================================================
+
+def _lm_abstract_params(cfg: LMConfig, tp: int, dtype=None):
+    ap = jax.eval_shape(partial(transformer.init_lm_params, cfg=cfg, tp=tp),
+                        jax.random.PRNGKey(0))
+    if dtype is not None:  # serving uses cast weights, not the f32 master
+        ap = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, dtype), ap)
+    return ap
+
+
+def _lm_meta(cfg: LMConfig, shape: ShapeSpec, rules: Rules) -> dict:
+    S, B = shape.dim("seq_len"), shape.dim("global_batch")
+    N, Na = cfg.param_count(), cfg.active_param_count()
+    tokens = B * S if shape.kind in ("train", "prefill") else B
+    mult = 6 if shape.kind == "train" else 2
+    kv_read = 0
+    if shape.kind == "decode":
+        kv_read = (cfg.n_layers * B * S * cfg.n_kv_heads * cfg.hd * 2) * 2  # bytes
+    return {
+        "family": "lm", "kind": shape.kind,
+        "params": N, "active_params": Na,
+        "tokens": tokens,
+        "model_flops": mult * Na * tokens,
+        "weight_bytes": Na * 2,
+        "kv_cache_bytes": kv_read,
+        "seq_len": S, "global_batch": B,
+        "n_layers": cfg.n_layers,
+    }
+
+
+def _lm_bundle(arch, cfg: LMConfig, shape: ShapeSpec, rules: Rules,
+               opts: RunOptions) -> StepBundle:
+    constrain = _constrain_fn(rules)
+    tp = rules.size("tensor")
+    dp = rules.size("batch")
+    if cfg.moe is not None and dp > 1 and opts.moe_groups != dp:
+        opts = dataclasses.replace(opts, moe_groups=dp)
+    S, B = shape.dim("seq_len"), shape.dim("global_batch")
+    serve_dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    ap = _lm_abstract_params(
+        cfg, tp, dtype=None if shape.kind == "train" else serve_dt)
+    logical = transformer.lm_param_logical(cfg)
+    if shape.kind != "train" and opts.serve_param_sharding == "tp_only":
+        # weight-stationary serving: replicate over data, shard over model
+        logical = jax.tree.map(
+            lambda axes: tuple(None if a == "fsdp" else a for a in axes),
+            logical,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                a is None or isinstance(a, str) for a in x))
+    p_spec = _spec_tree(rules, logical)
+    meta = _lm_meta(cfg, shape, rules)
+
+    if shape.kind == "train":
+        a_opt = jax.eval_shape(adamw_init, ap)
+        o_spec = type(a_opt)(m=p_spec, v=p_spec,
+                             count=rules.sharding())
+        tok_sh = rules.sharding("batch", None)
+
+        A = max(opts.grad_accum, 1)
+        assert B % A == 0, "global_batch must divide grad_accum"
+
+        def train_step(params, opt_state, tokens, targets):
+            def loss_fn(p, tk, tg):
+                return transformer.lm_loss(p, tk, tg, cfg, opts, constrain)
+            if A == 1:
+                loss, grads = jax.value_and_grad(loss_fn)(params, tokens,
+                                                          targets)
+            else:  # gradient accumulation over A microbatches (f32 accum)
+                tks = tokens.reshape(A, B // A, S)
+                tgs = targets.reshape(A, B // A, S)
+
+                def micro(acc, inp):
+                    g_sum, l_sum = acc
+                    tk, tg = inp
+                    l, g = jax.value_and_grad(loss_fn)(params, tk, tg)
+                    g_sum = jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32), g_sum, g)
+                    return (g_sum, l_sum + l), ()
+
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (grads, loss), _ = jax.lax.scan(micro, (g0, jnp.float32(0.0)),
+                                                (tks, tgs))
+                grads = jax.tree.map(lambda g: g / A, grads)
+                loss = loss / A
+            lr = cosine_schedule(opt_state.count)
+            params, opt_state, m = adamw_update(grads, opt_state, params, lr=lr)
+            return params, opt_state, {"loss": loss, **m}
+
+        tok = jax.ShapeDtypeStruct((B, S), I32)
+        return StepBundle(
+            arch=arch, shape=shape.name, step_fn=train_step,
+            abstract_inputs=(ap, a_opt, tok, tok),
+            in_shardings=(p_spec, o_spec, tok_sh, tok_sh),
+            out_shardings=(p_spec, o_spec,
+                           {"loss": rules.sharding(),
+                            "grad_norm": rules.sharding()}),
+            meta=meta, donate_argnums=(0, 1))
+
+    if shape.kind == "prefill":
+        def prefill_step(params, tokens):
+            return transformer.prefill(params, tokens, cfg, opts, constrain)
+
+        tok = jax.ShapeDtypeStruct((B, S), I32)
+        return StepBundle(
+            arch=arch, shape=shape.name, step_fn=prefill_step,
+            abstract_inputs=(ap, tok),
+            in_shardings=(p_spec, rules.sharding("batch", None)),
+            out_shardings=rules.sharding("batch", None, "tensor"),
+            meta=meta)
+
+    # decode
+    wide = B == 1
+    kv_dt = (jnp.float8_e4m3fn if opts.kv_cache_dtype == "f8"
+             else jnp.bfloat16)
+    cache = jax.eval_shape(partial(transformer.init_cache, cfg, B, S,
+                                   dtype=kv_dt))
+    c_spec = _spec_tree(rules, transformer.cache_logical(wide))
+
+    def serve_step(params, token, cache):
+        return transformer.decode_step(params, token, cache, cfg, opts,
+                                       constrain)
+
+    tok = jax.ShapeDtypeStruct((B, 1), I32)
+    tok_sh = (rules.sharding(None, None) if wide
+              else rules.sharding("batch", None))
+    logit_sh = (rules.sharding(None, None, "tensor") if wide
+                else rules.sharding("batch", None, "tensor"))
+    return StepBundle(
+        arch=arch, shape=shape.name, step_fn=serve_step,
+        abstract_inputs=(ap, tok, cache),
+        in_shardings=(p_spec, tok_sh, c_spec),
+        out_shardings=(logit_sh, c_spec),
+        meta=meta, donate_argnums=(2,))
+
+
+# ======================================================================
+# GNN family
+# ======================================================================
+
+def _gnn_dims(cfg: GNNConfig, shape: ShapeSpec):
+    d_feat = shape.dim("d_feat", 16)
+    if cfg.kind == "graphsage":
+        d_out = cfg.extra("n_classes", 41)
+    else:
+        d_out = cfg.extra("d_out", 3)
+    return d_feat, d_out
+
+
+def _gnn_batch_abstract(cfg: GNNConfig, shape: ShapeSpec):
+    """ShapeDtypeStructs for a graph batch of this shape."""
+    kind = shape.kind
+    d_feat, d_out = _gnn_dims(cfg, shape)
+    rbf = cfg.extra("rbf", 300)
+    if kind == "gnn_mol":
+        B = shape.dim("batch")
+        N, E = shape.dim("n_nodes"), shape.dim("n_edges")
+        b = {"nodes": jax.ShapeDtypeStruct((B, N, d_feat), F32),
+             "edge_src": jax.ShapeDtypeStruct((B, E), I32),
+             "edge_dst": jax.ShapeDtypeStruct((B, E), I32),
+             "edge_mask": jax.ShapeDtypeStruct((B, E), jnp.bool_),
+             "node_mask": jax.ShapeDtypeStruct((B, N), jnp.bool_)}
+        if cfg.kind == "schnet":
+            b["atom_types"] = jax.ShapeDtypeStruct((B, N), I32)
+            b["edge_rbf"] = jax.ShapeDtypeStruct((B, E, rbf), F32)
+            b["targets"] = jax.ShapeDtypeStruct((B,), F32)
+        else:
+            if cfg.kind in ("meshgraphnet", "graphcast"):
+                b["edge_feat"] = jax.ShapeDtypeStruct((B, E, 4), F32)
+            b["targets"] = jax.ShapeDtypeStruct((B, N, d_out), F32)
+            if cfg.kind == "graphsage":
+                b["targets"] = None
+                b["labels"] = jax.ShapeDtypeStruct((B, N), I32)
+        return {k: v for k, v in b.items() if v is not None}
+    # flat graph (full-batch or sampled block), padded to multiples of 512
+    if kind == "gnn_mini":
+        roots = shape.dim("batch_nodes")
+        fo = shape.dim("fanout")
+        n_nodes = min(shape.dim("n_nodes"),
+                      roots * (1 + fo[0] + fo[0] * fo[1]))
+        n_edges = roots * fo[0] + roots * fo[0] * fo[1]
+    else:
+        n_nodes, n_edges = shape.dim("n_nodes"), shape.dim("n_edges")
+    N = -(-n_nodes // 512) * 512
+    E = -(-n_edges // 512) * 512
+    b = {"nodes": jax.ShapeDtypeStruct((N, d_feat), F32),
+         "edge_src": jax.ShapeDtypeStruct((E,), I32),
+         "edge_dst": jax.ShapeDtypeStruct((E,), I32),
+         "edge_mask": jax.ShapeDtypeStruct((E,), jnp.bool_),
+         "node_mask": jax.ShapeDtypeStruct((N,), jnp.bool_)}
+    if cfg.kind == "schnet":
+        b["edge_rbf"] = jax.ShapeDtypeStruct((E, rbf), F32)
+        b["targets"] = jax.ShapeDtypeStruct((N,), F32)
+    elif cfg.kind == "graphsage":
+        b["labels"] = jax.ShapeDtypeStruct((N,), I32)
+    else:
+        b["edge_feat"] = jax.ShapeDtypeStruct((E, 4), F32)
+        b["targets"] = jax.ShapeDtypeStruct((N, d_out), F32)
+    return b
+
+
+def _gnn_batch_spec(cfg: GNNConfig, shape: ShapeSpec, rules: Rules, batch):
+    """NamedSharding tree matching _gnn_batch_abstract."""
+    mol = shape.kind == "gnn_mol"
+    out = {}
+    for k, v in batch.items():
+        nd = len(v.shape)
+        if mol:
+            out[k] = rules.sharding("batch", *([None] * (nd - 1)))
+        else:
+            out[k] = rules.sharding("cells", *([None] * (nd - 1)))
+    return out
+
+
+def _gnn_meta(cfg: GNNConfig, shape: ShapeSpec, params) -> dict:
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    if shape.kind == "gnn_mol":
+        E = shape.dim("n_edges") * shape.dim("batch")
+        N = shape.dim("n_nodes") * shape.dim("batch")
+    elif shape.kind == "gnn_mini":
+        roots, fo = shape.dim("batch_nodes"), shape.dim("fanout")
+        E = roots * fo[0] + roots * fo[0] * fo[1]
+        N = min(shape.dim("n_nodes"), roots * (1 + fo[0] + fo[0] * fo[1]))
+    else:
+        E, N = shape.dim("n_edges"), shape.dim("n_nodes")
+    d = cfg.d_hidden
+    # per message-passing block: edge MLP ~ edges x d^2 terms, node MLP ~ nodes
+    flops = 6 * cfg.n_layers * (E * (6 * d * d) + N * (6 * d * d))
+    return {"family": "gnn", "kind": shape.kind, "params": n_params,
+            "edges": E, "nodes": N, "model_flops": flops,
+            "weight_bytes": n_params * 4, "n_layers": cfg.n_layers}
+
+
+def _gnn_bundle(arch, cfg: GNNConfig, shape: ShapeSpec, rules: Rules,
+                opts: RunOptions) -> StepBundle:
+    d_feat, d_out = _gnn_dims(cfg, shape)
+    ap = jax.eval_shape(
+        partial(gnn.init_gnn_params, cfg=cfg, d_in=d_feat, d_out=d_out),
+        jax.random.PRNGKey(0))
+    p_spec = jax.tree.map(lambda p: rules.sharding(*(None,) * len(p.shape)), ap)
+    a_opt = jax.eval_shape(adamw_init, ap)
+    o_spec = type(a_opt)(m=p_spec, v=p_spec, count=rules.sharding())
+    batch = _gnn_batch_abstract(cfg, shape)
+    b_spec = _gnn_batch_spec(cfg, shape, rules, batch)
+    mol = shape.kind == "gnn_mol"
+
+    constrain = _constrain_fn(rules)
+
+    def loss_fn(p, b):
+        if mol:
+            per = jax.vmap(lambda bb: gnn.gnn_loss(p, bb, cfg))(b)
+            return per.mean()
+        return gnn.gnn_loss(p, b, cfg, constrain=constrain)
+
+    def train_step(params, opt_state, b):
+        loss, grads = jax.value_and_grad(loss_fn)(params, b)
+        lr = cosine_schedule(opt_state.count, base_lr=1e-3)
+        params, opt_state, m = adamw_update(grads, opt_state, params, lr=lr,
+                                            weight_decay=0.0)
+        return params, opt_state, {"loss": loss, **m}
+
+    return StepBundle(
+        arch=arch, shape=shape.name, step_fn=train_step,
+        abstract_inputs=(ap, a_opt, batch),
+        in_shardings=(p_spec, o_spec, b_spec),
+        out_shardings=(p_spec, o_spec,
+                       {"loss": rules.sharding(),
+                        "grad_norm": rules.sharding()}),
+        meta=_gnn_meta(cfg, shape, ap), donate_argnums=(0, 1))
+
+
+# ======================================================================
+# recsys
+# ======================================================================
+
+def _recsys_meta(cfg: RecsysConfig, shape: ShapeSpec, params) -> dict:
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    B = shape.dim("batch")
+    mlp_flops = 2 * sum(cfg.tower_mlp[i] * cfg.tower_mlp[i + 1]
+                        for i in range(len(cfg.tower_mlp) - 1))
+    mlp_flops += 2 * cfg.embed_dim * cfg.tower_mlp[0]
+    per_ex = 2 * mlp_flops  # two towers
+    if shape.kind == "recsys_train":
+        flops = 3 * (B * per_ex + 2 * B * B * cfg.tower_mlp[-1])
+    elif shape.kind == "recsys_retrieval":
+        Nc = shape.dim("n_candidates")
+        flops = Nc * (mlp_flops + 2 * cfg.tower_mlp[-1]) + mlp_flops
+    else:
+        flops = B * (per_ex + 2 * cfg.tower_mlp[-1])
+    emb_bytes = (cfg.n_users + cfg.n_items) * cfg.embed_dim * 4
+    return {"family": "recsys", "kind": shape.kind, "params": n_params,
+            "batch": B, "model_flops": flops, "weight_bytes": emb_bytes}
+
+
+def _recsys_bundle(arch, cfg: RecsysConfig, shape: ShapeSpec, rules: Rules,
+                   opts: RunOptions) -> StepBundle:
+    constrain = _constrain_fn(rules)
+    ap = jax.eval_shape(partial(recsys.init_recsys_params, cfg=cfg),
+                        jax.random.PRNGKey(0))
+    p_spec = _spec_tree(rules, recsys.recsys_param_logical(ap))
+    B = shape.dim("batch")
+    H = cfg.n_user_hist
+    meta = _recsys_meta(cfg, shape, ap)
+
+    if shape.kind == "recsys_train":
+        a_opt = jax.eval_shape(adamw_init, ap)
+        o_spec = type(a_opt)(m=p_spec, v=p_spec, count=rules.sharding())
+        batch = {"hist_ids": jax.ShapeDtypeStruct((B, H), I32),
+                 "item_ids": jax.ShapeDtypeStruct((B,), I32),
+                 "sampling_logq": jax.ShapeDtypeStruct((B,), F32)}
+        b_spec = {"hist_ids": rules.sharding("batch", None),
+                  "item_ids": rules.sharding("batch"),
+                  "sampling_logq": rules.sharding("batch")}
+
+        def train_step(params, opt_state, b):
+            loss, grads = jax.value_and_grad(
+                lambda p: recsys.recsys_loss(p, b, cfg, constrain))(params)
+            lr = cosine_schedule(opt_state.count, base_lr=1e-3)
+            params, opt_state, m = adamw_update(grads, opt_state, params,
+                                                lr=lr, weight_decay=0.0)
+            return params, opt_state, {"loss": loss, **m}
+
+        return StepBundle(
+            arch=arch, shape=shape.name, step_fn=train_step,
+            abstract_inputs=(ap, a_opt, batch),
+            in_shardings=(p_spec, o_spec, b_spec),
+            out_shardings=(p_spec, o_spec,
+                           {"loss": rules.sharding(),
+                            "grad_norm": rules.sharding()}),
+            meta=meta, donate_argnums=(0, 1))
+
+    if shape.kind == "recsys_serve":
+        def serve_step(params, hist_ids, item_ids):
+            return recsys.score_candidates(params, hist_ids, item_ids)
+
+        return StepBundle(
+            arch=arch, shape=shape.name, step_fn=serve_step,
+            abstract_inputs=(ap, jax.ShapeDtypeStruct((B, H), I32),
+                             jax.ShapeDtypeStruct((B,), I32)),
+            in_shardings=(p_spec, rules.sharding("batch", None),
+                          rules.sharding("batch")),
+            out_shardings=rules.sharding("batch"),
+            meta=meta)
+
+    # retrieval: 1 query vs n_candidates (padded to a shardable multiple;
+    # padding ids are -1 and masked to -inf before top-k)
+    Nc = shape.dim("n_candidates")
+    Nc_pad = -(-Nc // 512) * 512
+
+    def retrieval_step(params, hist_ids, cand_ids):
+        u = recsys.user_tower(params, hist_ids)
+        v = recsys.item_tower(params, jnp.maximum(cand_ids, 0))
+        v = constrain(v, ("cells", None))
+        scores = (v @ u[0]).astype(jnp.float32)
+        scores = jnp.where(cand_ids >= 0, scores, -jnp.inf)
+        vals, idx = jax.lax.top_k(scores, 100)
+        return vals, cand_ids[idx]
+
+    return StepBundle(
+        arch=arch, shape=shape.name, step_fn=retrieval_step,
+        abstract_inputs=(ap, jax.ShapeDtypeStruct((1, H), I32),
+                         jax.ShapeDtypeStruct((Nc_pad,), I32)),
+        in_shardings=(p_spec, rules.sharding(None, None),
+                      rules.sharding("cells")),
+        out_shardings=(rules.sharding(None), rules.sharding(None)),
+        meta=meta)
+
+
+# ======================================================================
+# paper engine (billion-scale dry-run cell)
+# ======================================================================
+
+def _engine_bundle(arch, cfg: PathEngineConfig, shape: ShapeSpec,
+                   rules: Rules, opts: RunOptions) -> StepBundle:
+    constrain = _constrain_fn(rules)
+    V = shape.dim("n_vertices")
+    Q = shape.dim("n_queries")
+    k = shape.dim("k")
+    cap = cfg.ell_cap
+    W = -(-Q // 32)                              # packed frontier words
+    # pruned-subgraph enumeration working set (see DESIGN.md §4)
+    Vp = min(V, 1 << 22)
+    P_CAP = 1 << 20
+    width = (k + 1) // 2 + 1
+
+    def engine_superstep(ell_idx, frontier, dist, hop,
+                         pruned_ell, pruned_mask, slack, paths, count):
+        """One index hop (bit-packed MS-BFS) + one enumeration expand."""
+        # --- MS-BFS hop over the vertex-sharded billion-edge graph
+        # frontier/dist come in without the sentinel row (shardable V);
+        # append it here (pad index = V in the ELL).
+        fw = jnp.concatenate(
+            [frontier, jnp.zeros((1, W), jnp.uint32)], axis=0)
+        gathered = fw[ell_idx]                   # (V, cap, W) via SPMD gather
+        nxt = jax.lax.reduce(gathered, jnp.uint32(0), jax.lax.bitwise_or, (1,))
+        nxt = constrain(nxt, ("cells", None))
+        # unpack -> per-query newly-reached -> dist update -> repack frontier
+        shifts = jnp.arange(32, dtype=jnp.uint32)
+        bits = ((nxt[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1))
+        bits = bits.reshape(V, W * 32)[:, :Q].astype(bool)
+        unreached = dist == jnp.int8(127)
+        newly = bits & unreached
+        dist = jnp.where(newly, hop.astype(jnp.int8), dist)
+        dist = constrain(dist, ("cells", None))
+        pad_q = W * 32 - Q
+        nb = jnp.pad(newly, ((0, 0), (0, pad_q))).reshape(V, W, 32)
+        powers = jnp.uint32(1) << shifts
+        frontier = jnp.sum(nb.astype(jnp.uint32) * powers[None, None, :],
+                           axis=-1, dtype=jnp.uint32)
+        frontier = constrain(frontier, ("cells", None))
+        # --- enumeration superstep on the index-pruned subgraph
+        from ..core.enumerate import expand_level
+        out = expand_level(paths, count, pruned_ell, pruned_mask, slack,
+                           jnp.full((Vp + 1,), -1, jnp.int8), jnp.int32(-2),
+                           level=1, budget=width - 1, out_cap=P_CAP)
+        return frontier, dist, out.frontier.verts, out.frontier.count
+
+    inputs = (
+        jax.ShapeDtypeStruct((V, cap), I32),            # ell_idx
+        jax.ShapeDtypeStruct((V, W), jnp.uint32),       # frontier
+        jax.ShapeDtypeStruct((V, Q), jnp.int8),         # dist
+        jax.ShapeDtypeStruct((), I32),                  # hop
+        jax.ShapeDtypeStruct((Vp + 1, cap), I32),       # pruned ell
+        jax.ShapeDtypeStruct((Vp + 1, cap), jnp.bool_),
+        jax.ShapeDtypeStruct((Vp + 1,), jnp.int8),      # slack
+        jax.ShapeDtypeStruct((P_CAP, width), I32),      # paths
+        jax.ShapeDtypeStruct((), I32),                  # count
+    )
+    split = opts.engine_frontier_shard == "split"
+    fr_sh = (rules.sharding("batch", "tensor") if split
+             else rules.sharding("cells", None))
+    in_sh = (rules.sharding("batch", None) if split
+             else rules.sharding("cells", None),
+             fr_sh,
+             rules.sharding("batch", "tensor") if split
+             else rules.sharding("cells", None),
+             rules.sharding(),
+             rules.sharding(None, None),
+             rules.sharding(None, None),
+             rules.sharding(None),
+             rules.sharding("cells", None),
+             rules.sharding())
+    out_sh = (rules.sharding("cells", None), rules.sharding("cells", None),
+              rules.sharding("cells", None), rules.sharding())
+    E = V * shape.dim("avg_degree")
+    meta = {"family": "engine", "kind": "engine_batch",
+            "vertices": V, "edges": E, "queries": Q,
+            # one hop touches E edge-words + expand touches P_CAP*cap cells
+            "model_flops": float(E) * W + float(P_CAP) * cap * width,
+            "weight_bytes": V * cap * 4}
+    return StepBundle(arch=arch, shape=shape.name, step_fn=engine_superstep,
+                      abstract_inputs=inputs, in_shardings=in_sh,
+                      out_shardings=out_sh, meta=meta)

@@ -1,0 +1,1 @@
+from . import transformer, moe, gnn, recsys, sharding, sampler  # noqa: F401

@@ -1,0 +1,285 @@
+"""GNN zoo: MeshGraphNet, GraphCast(-style), SchNet, GraphSAGE.
+
+Message passing is ``segment_sum`` over an edge list (JAX has no CSR SpMM;
+this gather/scatter form IS the system, per the assignment), with two
+execution paths:
+
+  * local  -- single-shard edge list (smoke tests, minibatch_lg sampled
+              blocks, molecule batches; data-parallel over the batch).
+  * ring   -- full-graph shapes: nodes row-partitioned over all mesh axes,
+              edges bucketed by (dst_owner, src_owner); P ring steps rotate
+              the node-feature shard with ``collective_permute`` while each
+              shard aggregates its incoming bucket — comm volume N·F per
+              layer (the minimum for row-partitioned SpMM), fully
+              overlappable with the bucket GEMMs. This replaces CUDA
+              scatter-atomics with a TPU-native systolic schedule.
+
+Aggregation op per config (sum/mean/max). MLPs follow each paper's shape
+(2-layer + LayerNorm for MGN/GraphCast; shifted-softplus for SchNet).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..config import GNNConfig
+
+__all__ = ["init_gnn_params", "gnn_param_logical", "gnn_forward", "gnn_loss",
+           "ring_aggregate"]
+
+
+# ----------------------------------------------------------------------
+# small building blocks
+# ----------------------------------------------------------------------
+
+def _mlp_init(rng, sizes, n_hidden_layers=2, layer_norm=True):
+    dims = [sizes[0]] + [sizes[1]] * (n_hidden_layers - 1) + [sizes[-1]]
+    keys = jax.random.split(rng, len(dims))
+    p = {"w": [], "b": []}
+    for i in range(len(dims) - 1):
+        p["w"].append(jax.random.normal(keys[i], (dims[i], dims[i + 1]),
+                                        jnp.float32) / np.sqrt(dims[i]))
+        p["b"].append(jnp.zeros((dims[i + 1],), jnp.float32))
+    if layer_norm:
+        p["ln_g"] = jnp.ones((dims[-1],), jnp.float32)
+        p["ln_b"] = jnp.zeros((dims[-1],), jnp.float32)
+    return p
+
+
+def _mlp(p, x, act=jax.nn.relu):
+    n = len(p["w"])
+    for i in range(n):
+        x = x @ p["w"][i] + p["b"][i]
+        if i < n - 1:
+            x = act(x)
+    if "ln_g" in p:
+        mu = x.mean(-1, keepdims=True)
+        var = ((x - mu) ** 2).mean(-1, keepdims=True)
+        x = (x - mu) * jax.lax.rsqrt(var + 1e-6) * p["ln_g"] + p["ln_b"]
+    return x
+
+
+def _mlp_logical(p):
+    return jax.tree.map(lambda _: (None,) , p)  # GNN params replicated
+
+
+def _segment(msgs, dst, n, op):
+    if op == "mean":
+        s = jax.ops.segment_sum(msgs, dst, num_segments=n)
+        c = jax.ops.segment_sum(jnp.ones((msgs.shape[0], 1), msgs.dtype), dst,
+                                num_segments=n)
+        return s / jnp.maximum(c, 1.0)
+    if op == "max":
+        s = jax.ops.segment_max(msgs, dst, num_segments=n)
+        return jnp.where(jnp.isfinite(s), s, 0.0)
+    return jax.ops.segment_sum(msgs, dst, num_segments=n)
+
+
+# ----------------------------------------------------------------------
+# ring-distributed aggregation (full-graph shapes)
+# ----------------------------------------------------------------------
+
+def ring_aggregate(h_loc, edge_src, edge_dst, edge_mask, axis_name: str,
+                   msg_fn=None, op: str = "sum"):
+    """Row-partitioned SpMM by ring rotation.
+
+    h_loc    : (N_loc, F) this shard's node features.
+    edge_src : (P, Eb) int32 — for src-block b, local index of src within b.
+    edge_dst : (P, Eb) int32 — local dst index (this shard's range).
+    edge_mask: (P, Eb) bool.
+    msg_fn   : optional map over gathered src features (default identity).
+    """
+    P = edge_src.shape[0]
+    N_loc, F = h_loc.shape[0], h_loc.shape[-1]
+    me = jax.lax.axis_index(axis_name)
+    perm = [(i, (i + 1) % P) for i in range(P)]
+
+    def body(r, carry):
+        acc, rot = carry
+        blk = (me - r) % P                       # block id `rot` holds now
+        es = jax.lax.dynamic_index_in_dim(edge_src, blk, 0, keepdims=False)
+        ed = jax.lax.dynamic_index_in_dim(edge_dst, blk, 0, keepdims=False)
+        em = jax.lax.dynamic_index_in_dim(edge_mask, blk, 0, keepdims=False)
+        src_h = rot[es]                          # (Eb, F)
+        msgs = msg_fn(src_h, ed) if msg_fn else src_h
+        msgs = jnp.where(em[:, None], msgs, 0.0)
+        acc = acc + jax.ops.segment_sum(msgs, jnp.where(em, ed, N_loc),
+                                        num_segments=N_loc + 1)[:-1]
+        rot = jax.lax.ppermute(rot, axis_name, perm)
+        return acc, rot
+
+    acc0 = jnp.zeros((N_loc,) + ((msg_fn(h_loc[:1], jnp.zeros(1, jnp.int32)).shape[-1],)
+                                 if msg_fn else (F,)), h_loc.dtype)
+    acc, _ = jax.lax.fori_loop(0, P, body, (acc0, h_loc))
+    return acc
+
+
+# ----------------------------------------------------------------------
+# parameter init per architecture
+# ----------------------------------------------------------------------
+
+def init_gnn_params(rng, cfg: GNNConfig, d_in: int, d_out: int) -> dict:
+    d = cfg.d_hidden
+    L = cfg.n_layers
+    keys = jax.random.split(rng, L * 4 + 8)
+    ki = iter(range(len(keys)))
+    if cfg.kind == "graphsage":
+        p = {"layers": []}
+        dims = [d_in] + [d] * L
+        for l in range(L):
+            p["layers"].append({
+                "w_self": jax.random.normal(keys[next(ki)], (dims[l], d)) / np.sqrt(dims[l]),
+                "w_nbr": jax.random.normal(keys[next(ki)], (dims[l], d)) / np.sqrt(dims[l]),
+                "b": jnp.zeros((d,)),
+            })
+        p["out"] = jax.random.normal(keys[next(ki)], (d, d_out)) / np.sqrt(d)
+        return p
+    if cfg.kind in ("meshgraphnet", "graphcast"):
+        blocks = [{
+            "edge_mlp": _mlp_init(keys[next(ki)], (3 * d, d, d), cfg.mlp_layers),
+            "node_mlp": _mlp_init(keys[next(ki)], (2 * d, d, d), cfg.mlp_layers),
+        } for _ in range(L)]
+        return {
+            "node_enc": _mlp_init(keys[next(ki)], (d_in, d, d), cfg.mlp_layers),
+            "edge_enc": _mlp_init(keys[next(ki)], (4, d, d), cfg.mlp_layers),
+            # stacked (L, ...) so the forward scans + remats per block
+            "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *blocks),
+            "node_dec": _mlp_init(keys[next(ki)], (d, d, d_out), cfg.mlp_layers,
+                                  layer_norm=False),
+        }
+    if cfg.kind == "schnet":
+        rbf = cfg.extra("rbf", 300)
+        blocks = [{
+            "filter1": jax.random.normal(keys[next(ki)], (rbf, d)) / np.sqrt(rbf),
+            "filter2": jax.random.normal(keys[next(ki)], (d, d)) / np.sqrt(d),
+            "w_in": jax.random.normal(keys[next(ki)], (d, d)) / np.sqrt(d),
+            "w_out1": jax.random.normal(keys[next(ki)], (d, d)) / np.sqrt(d),
+            "w_out2": jax.random.normal(keys[next(ki)], (d, d)) / np.sqrt(d),
+        } for _ in range(L)]
+        return {
+            "embed": jax.random.normal(keys[next(ki)], (100, d)) * 0.1,
+            "in_proj": jax.random.normal(keys[next(ki)], (d_in, d)) / np.sqrt(d_in),
+            "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *blocks),
+            "out1": jax.random.normal(keys[next(ki)], (d, d // 2)) / np.sqrt(d),
+            "out2": jax.random.normal(keys[next(ki)], (d // 2, d_out)) / np.sqrt(d // 2),
+        }
+    raise ValueError(cfg.kind)
+
+
+def gnn_param_logical(params) -> Any:
+    """GNN params are small -> replicated."""
+    return jax.tree.map(lambda p: tuple(None for _ in p.shape), params)
+
+
+# ----------------------------------------------------------------------
+# forward (local edge-list path; ring path hooks via aggregate_fn)
+# ----------------------------------------------------------------------
+
+def _ssp(x):  # shifted softplus (SchNet)
+    return jax.nn.softplus(x) - np.log(2.0)
+
+
+def gnn_forward(params, batch, cfg: GNNConfig, constrain=None):
+    """batch: dict with nodes/edge_src/edge_dst (+kind-specific extras).
+
+    constrain(x, logical_axes): sharding hook — node arrays get
+    ("cells", None), edge arrays ("cells", None). Without these, GSPMD
+    replicates the (E, d) edge latents on big full-batch graphs
+    (measured 241 GiB/device on graphcast x ogb_products).
+    """
+    if constrain is None:
+        constrain = lambda x, axes: x
+    cn = lambda x: constrain(x, ("cells",) + (None,) * (x.ndim - 1))
+    nodes = batch["nodes"]
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    emask = batch.get("edge_mask")
+    N = nodes.shape[0]
+    op = cfg.aggregator
+
+    def local_agg(h_src_feats, dst_idx, want_op=op):
+        m = cn(h_src_feats)
+        if emask is not None:
+            m = jnp.where(emask[:, None], m, 0.0 if want_op != "max" else -jnp.inf)
+            dst_idx = jnp.where(emask, dst_idx, N)
+            out = _segment(m, dst_idx, N + 1, want_op)[:-1]
+            return cn(out)
+        return cn(_segment(m, dst_idx, N, want_op))
+
+    if cfg.kind == "graphsage":
+        h = cn(nodes)
+        for lp in params["layers"]:
+            nbr = local_agg(h[src], dst, "mean")
+            h = jax.nn.relu(h @ lp["w_self"] + nbr @ lp["w_nbr"] + lp["b"])
+            h = cn(h / jnp.maximum(
+                jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-6))
+        return h @ params["out"]
+
+    if cfg.kind in ("meshgraphnet", "graphcast"):
+        h = cn(_mlp(params["node_enc"], nodes))
+        ef = batch.get("edge_feat")
+        if ef is None:
+            ef = jnp.zeros((src.shape[0], 4), nodes.dtype)
+        e = cn(_mlp(params["edge_enc"], ef))
+
+        def block(carry, bp):
+            h, e = carry
+            msg_in = cn(jnp.concatenate([e, h[src], h[dst]], -1))
+            e = cn(e + _mlp(bp["edge_mlp"], msg_in))
+            agg = local_agg(e, dst, op)
+            h = cn(h + _mlp(bp["node_mlp"], jnp.concatenate([h, agg], -1)))
+            return (h, e), ()
+
+        block = jax.checkpoint(
+            block, policy=jax.checkpoint_policies.nothing_saveable)
+        (h, e), _ = jax.lax.scan(block, (h, e), params["blocks"])
+        return _mlp(params["node_dec"], h)
+
+    if cfg.kind == "schnet":
+        if "atom_types" in batch:
+            h = params["embed"][batch["atom_types"]]
+        else:
+            h = nodes @ params["in_proj"]
+        h = cn(h)
+        rbf = batch["edge_rbf"]                     # (E, n_rbf) precomputed
+
+        def block(h, bp):
+            w = cn(_ssp(rbf @ bp["filter1"]) @ bp["filter2"])  # (E, d) cfconv
+            msg = (h @ bp["w_in"])[src] * w
+            agg = local_agg(msg, dst, "sum")
+            h = cn(h + _ssp(agg @ bp["w_out1"]) @ bp["w_out2"])
+            return h, ()
+
+        block = jax.checkpoint(
+            block, policy=jax.checkpoint_policies.nothing_saveable)
+        h, _ = jax.lax.scan(block, h, params["blocks"])
+        atom_e = _ssp(h @ params["out1"]) @ params["out2"]
+        return atom_e                                # (N, d_out) per-atom energy
+
+    raise ValueError(cfg.kind)
+
+
+def gnn_loss(params, batch, cfg: GNNConfig, constrain=None):
+    out = gnn_forward(params, batch, cfg, constrain=constrain)
+    nmask = batch.get("node_mask")
+    if cfg.kind == "graphsage":                     # node classification
+        labels = batch["labels"]
+        logp = jax.nn.log_softmax(out, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+        if nmask is not None:
+            return jnp.sum(nll * nmask) / jnp.maximum(nmask.sum(), 1.0)
+        return nll.mean()
+    if cfg.kind == "schnet":                        # energy regression (sum-pool)
+        if nmask is not None:
+            energy = jnp.sum(out * nmask[:, None])
+        else:
+            energy = jnp.sum(out)
+        return jnp.mean((energy - jnp.sum(batch["targets"])) ** 2)
+    # node regression (meshgraphnet / graphcast)
+    err = (out - batch["targets"]) ** 2
+    if nmask is not None:
+        return jnp.sum(err * nmask[:, None]) / jnp.maximum(nmask.sum() * out.shape[-1], 1.0)
+    return err.mean()

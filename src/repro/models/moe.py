@@ -1,0 +1,101 @@
+"""MoE FFN (moonshot-v1-16b-a3b: 64e top-6; olmoe-1b-7b: 64e top-8).
+
+Grouped sort-based dispatch with static capacity — no (T, E, C) one-hot
+tensors (the GShard einsum formulation is O(T*E*C) memory and cannot
+compile at 1M-token batches). Tokens are split into G groups (sharded over
+the data axis, GShard-style) and each group dispatches locally:
+
+  router top-k -> flat (Tg*k) expert ids -> argsort -> rank-in-expert via
+  searchsorted -> capacity mask -> scatter to (G, E, C, D) -> grouped
+  expert einsum -> gather back -> gate-weighted combine (drops get 0).
+
+The (G, E, C, D) dispatch buffer is sharded over BOTH the group axis
+("batch" = data) and the expert axis ("expert" = model); the reshard
+between token-sharded x and expert-sharded dispatch lowers to the EP
+all-to-all. Without grouping, XLA replicates the dispatch scatter and
+per-device memory explodes (measured: 314 GiB -> small on
+moonshot train_4k). Aux loss is the standard Switch fraction-product.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..config import LMConfig
+
+__all__ = ["moe_ffn", "moe_ffn_dense_ref"]
+
+
+def moe_ffn(h, lp, cfg: LMConfig, constrain, groups: int = 16):
+    """h: (B, S, D) -> (B, S, D), aux loss scalar."""
+    mc = cfg.moe
+    B, S, D = h.shape
+    T = B * S
+    G = math.gcd(T, max(groups, 1))
+    Tg = T // G
+    E, k = mc.n_experts, mc.top_k
+    C = max(int(Tg * k / E * mc.capacity_factor), 1)
+    dt = h.dtype
+
+    x = h.reshape(G, Tg, D)
+    x = constrain(x, ("batch", None, None))
+    logits = (x @ lp["router"].astype(dt)).astype(jnp.float32)   # (G, Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eids = jax.lax.top_k(probs, k)                        # (G, Tg, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.zeros((E,), jnp.float32).at[eids.reshape(-1)].add(1.0) / (T * k)
+    aux = E * jnp.sum(me * ce)
+
+    def dispatch(xg, eg, gg):
+        flat_e = eg.reshape(-1)                                  # (Tg*k,)
+        flat_t = jnp.repeat(jnp.arange(Tg), k)
+        flat_g = gg.reshape(-1)
+        order = jnp.argsort(flat_e)
+        se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+        rank = jnp.arange(Tg * k) - jnp.searchsorted(se, se, side="left")
+        keep = rank < C
+        slot = jnp.where(keep, se * C + rank, E * C)             # drop slot
+        disp = jnp.zeros((E * C + 1, D), dt).at[slot].set(xg[st])
+        return disp[:-1].reshape(E, C, D), slot, st, keep, sg
+
+    disp, slot, st, keep, sg = jax.vmap(dispatch)(x, eids, gates)
+    disp = constrain(disp, ("batch", "expert", None, None))
+
+    g = jax.nn.silu(jnp.einsum("gecd,edf->gecf", disp, lp["e_gate"].astype(dt)))
+    u = jnp.einsum("gecd,edf->gecf", disp, lp["e_up"].astype(dt))
+    eh = constrain(g * u, ("batch", "expert", None, None))
+    eo = jnp.einsum("gecf,efd->gecd", eh, lp["e_down"].astype(dt))
+    eo = constrain(eo, ("batch", "expert", None, None))
+
+    def combine(eog, slotg, stg, keepg, sgg):
+        flat_out = eog.reshape(E * C, D)
+        back = jnp.where(keepg[:, None],
+                         flat_out[jnp.minimum(slotg, E * C - 1)], 0)
+        return jnp.zeros((Tg, D), dt).at[stg].add(
+            back * sgg[:, None].astype(dt))
+
+    out = jax.vmap(combine)(eo, slot, st, keep, sg)
+    out = constrain(out, ("batch", None, None))
+    return out.reshape(B, S, D), aux
+
+
+def moe_ffn_dense_ref(h, lp, cfg: LMConfig):
+    """Oracle: evaluate every expert densely, weight by router gates."""
+    mc = cfg.moe
+    B, S, D = h.shape
+    x = h.reshape(B * S, D).astype(jnp.float32)
+    logits = x @ lp["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eids = jax.lax.top_k(probs, mc.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    w = jnp.zeros_like(probs).at[jnp.arange(x.shape[0])[:, None], eids].set(gates)
+    g = jax.nn.silu(jnp.einsum("td,edf->tef", x, lp["e_gate"].astype(jnp.float32)))
+    u = jnp.einsum("td,edf->tef", x, lp["e_up"].astype(jnp.float32))
+    eo = jnp.einsum("tef,efd->ted", g * u, lp["e_down"].astype(jnp.float32))
+    out = jnp.einsum("ted,te->td", eo, w)
+    return out.reshape(B, S, D).astype(h.dtype)

@@ -1,0 +1,83 @@
+"""Logical-axis sharding rules (MaxText-style) for the model zoo.
+
+Model code annotates arrays with *logical* axes; the rules below map them
+to mesh axes for the active topology. Meshes:
+
+  host      : (1,)            -- CPU tests
+  pod       : (16, 16)        ("data", "model")
+  multipod  : (2, 16, 16)     ("pod", "data", "model")
+
+Rules (see DESIGN.md §4):
+  * "batch"   -> ("pod", "data")   data parallel (+ pods)
+  * "fsdp"    -> ("pod", "data")   parameter row sharding (ZeRO-3 style)
+  * "tensor"  -> "model"           tensor parallel (heads / ffn / vocab)
+  * "expert"  -> "model"           expert parallel (MoE)
+  * "cells"   -> all axes flat     GNN nodes/edges, recsys rows, engine rows
+  * "seq_kv"  -> "model" (or all axes when batch == 1) for decode KV
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["Rules", "logical_to_sharding", "tree_shardings"]
+
+
+class Rules:
+    def __init__(self, mesh: Mesh):
+        self.mesh = mesh
+        names = mesh.axis_names
+        has_pod = "pod" in names
+        dp = ("pod", "data") if has_pod else ("data",)
+        self.map = {
+            "batch": dp,
+            "fsdp": dp,
+            "tensor": ("model",),
+            "expert": ("model",),
+            "cells": tuple(names),
+            "seq": ("model",),             # sequence-parallel residual stream
+            "seq_kv": ("model",),
+            "seq_kv_wide": tuple(names),   # batch=1 long-context decode
+            None: None,
+        }
+        self.axis_sizes = dict(zip(names, mesh.devices.shape))
+
+    def size(self, logical: str) -> int:
+        axes = self.map.get(logical, None)
+        if not axes:
+            return 1
+        out = 1
+        for a in axes:
+            out *= self.axis_sizes[a]
+        return out
+
+    def spec(self, *logical: Optional[str]) -> P:
+        parts = []
+        for l in logical:
+            m = self.map.get(l, None) if l is not None else None
+            if m is None:
+                parts.append(None)
+            elif len(m) == 1:
+                parts.append(m[0])
+            else:
+                parts.append(m)
+        return P(*parts)
+
+    def sharding(self, *logical: Optional[str]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+
+def logical_to_sharding(rules: Rules, logical_axes) -> NamedSharding:
+    return rules.sharding(*logical_axes)
+
+
+def tree_shardings(rules: Rules, logical_tree):
+    """Map a pytree of logical-axis tuples to NamedShardings."""
+    return jax.tree.map(
+        lambda axes: rules.sharding(*axes),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x),
+    )

@@ -1,0 +1,456 @@
+"""Dense + MoE decoder-only transformer (the 5 assigned LM architectures).
+
+Covers: GQA attention (optional QKV bias — Qwen), RoPE, RMSNorm, SwiGLU FFN
+or MoE FFN, tied/untied embeddings, scan-over-layers with remat, chunked
+cross-entropy (vocab stays tensor-sharded), prefill and KV-cache decode.
+
+All attention goes through a chunked online-softmax implementation (the
+jnp twin of kernels/flash_attention) so scores are never (S, S)-resident —
+required for the 32k prefill dry-run cells; on TPU the Pallas kernel takes
+over via the backend switch.
+
+Sharding (logical axes; see models/sharding.py):
+  params:  rows "fsdp", cols "tensor" (up) / rows "tensor", cols "fsdp" (down)
+  acts:    batch "batch"; heads "tensor"; ffn hidden "tensor"
+  decode KV cache: sequence axis "seq_kv" ("seq_kv_wide" when batch == 1)
+Q heads are padded up to a multiple of the tensor axis when needed
+(qwen2.5-14b: 40 -> 48 on a 16-way axis; zero-init extra heads are exact
+no-ops); KV projections are replicated across "tensor" when
+n_kv_heads < tensor size (standard GQA TP practice).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..config import LMConfig, RunOptions
+
+__all__ = ["init_lm_params", "lm_param_logical", "lm_forward", "lm_loss",
+           "prefill", "decode_step", "init_cache", "cache_logical",
+           "padded_heads"]
+
+
+def padded_heads(cfg: LMConfig, tp: int) -> int:
+    return -(-cfg.n_heads // tp) * tp
+
+
+def _dtype(cfg: LMConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ----------------------------------------------------------------------
+# parameters
+# ----------------------------------------------------------------------
+
+def init_lm_params(rng: jax.Array, cfg: LMConfig, tp: int = 1) -> dict:
+    """f32 master params. Layer params stacked on a leading L axis (scan)."""
+    L, D, hd = cfg.n_layers, cfg.d_model, cfg.hd
+    Hq = padded_heads(cfg, tp)
+    Hkv = cfg.n_kv_heads
+    keys = jax.random.split(rng, 16)
+
+    def norm(k, *shape, scale=1.0):
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        return (jax.random.normal(k, shape, jnp.float32) * scale
+                / np.sqrt(fan_in))
+
+    p: dict[str, Any] = {
+        "embed": norm(keys[0], cfg.vocab, D, scale=1.0),
+        "final_norm": jnp.ones((D,), jnp.float32),
+        "layers": {
+            "attn_norm": jnp.ones((L, D), jnp.float32),
+            "ffn_norm": jnp.ones((L, D), jnp.float32),
+            "wq": norm(keys[1], L, D, Hq * hd),
+            "wk": norm(keys[2], L, D, Hkv * hd),
+            "wv": norm(keys[3], L, D, Hkv * hd),
+            "wo": norm(keys[4], L, Hq * hd, D),
+        },
+    }
+    # zero the padded q heads so they are exact no-ops
+    if Hq != cfg.n_heads:
+        mask = (jnp.arange(Hq * hd) < cfg.n_heads * hd).astype(jnp.float32)
+        p["layers"]["wq"] = p["layers"]["wq"] * mask[None, None, :]
+        p["layers"]["wo"] = p["layers"]["wo"] * mask[None, :, None]
+    if cfg.qkv_bias:
+        p["layers"]["bq"] = jnp.zeros((L, Hq * hd), jnp.float32)
+        p["layers"]["bk"] = jnp.zeros((L, Hkv * hd), jnp.float32)
+        p["layers"]["bv"] = jnp.zeros((L, Hkv * hd), jnp.float32)
+    if cfg.moe is None:
+        p["layers"]["w_gate"] = norm(keys[5], L, D, cfg.d_ff)
+        p["layers"]["w_up"] = norm(keys[6], L, D, cfg.d_ff)
+        p["layers"]["w_down"] = norm(keys[7], L, cfg.d_ff, D)
+    else:
+        E, F = cfg.moe.n_experts, cfg.moe.d_ff_expert
+        p["layers"]["router"] = norm(keys[8], L, D, E)
+        p["layers"]["e_gate"] = norm(keys[9], L, E, D, F)
+        p["layers"]["e_up"] = norm(keys[10], L, E, D, F)
+        p["layers"]["e_down"] = norm(keys[11], L, E, F, D)
+    if not cfg.tie_embeddings:
+        p["unembed"] = norm(keys[12], D, cfg.vocab)
+    return p
+
+
+def lm_param_logical(cfg: LMConfig) -> dict:
+    lay = {
+        "attn_norm": (None, None),
+        "ffn_norm": (None, None),
+        "wq": (None, "fsdp", "tensor"),
+        "wk": (None, "fsdp", None),       # KV replicated across tensor
+        "wv": (None, "fsdp", None),
+        "wo": (None, "tensor", "fsdp"),
+    }
+    if cfg.qkv_bias:
+        lay.update({"bq": (None, "tensor"), "bk": (None, None),
+                    "bv": (None, None)})
+    if cfg.moe is None:
+        lay.update({"w_gate": (None, "fsdp", "tensor"),
+                    "w_up": (None, "fsdp", "tensor"),
+                    "w_down": (None, "tensor", "fsdp")})
+    else:
+        lay.update({"router": (None, "fsdp", None),
+                    "e_gate": (None, "expert", "fsdp", None),
+                    "e_up": (None, "expert", "fsdp", None),
+                    "e_down": (None, "expert", None, "fsdp")})
+    out = {"embed": ("tensor", "fsdp"), "final_norm": (None,), "layers": lay}
+    if not cfg.tie_embeddings:
+        out["unembed"] = ("fsdp", "tensor")
+    return out
+
+
+# ----------------------------------------------------------------------
+# building blocks
+# ----------------------------------------------------------------------
+
+def rmsnorm(x, w, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w.astype(x.dtype)
+
+
+def rope(x, positions, theta):
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_offset, chunk: int = 1024,
+                      kv_valid_len=None, return_stats: bool = False):
+    """Online-softmax attention, never materializing (Sq, Skv).
+
+    q: (B, Sq, Hq, hd); k, v: (B, Skv, Hkv, hd). q_offset: scalar — absolute
+    position of q[0] (decode). kv_valid_len: scalar — mask cache tail.
+    """
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    # all matmuls stay in the input dtype with f32 accumulation
+    # (preferred_element_type); converting K/V chunks to f32 lets XLA hoist
+    # the convert out of both scans and materialize a full f32 cache copy
+    # (measured +5 GiB/device on qwen110 decode_32k).
+    qf = (q / np.sqrt(hd).astype(q.dtype)).transpose(0, 2, 1, 3)  # (B,Hq,Sq,hd)
+    kf = k.transpose(0, 2, 1, 3)                  # (B,Hkv,Skv,hd), input dtype
+    vf = v.transpose(0, 2, 1, 3)
+    nchunk = -(-Skv // chunk)
+    pad = nchunk * chunk - Skv
+    kf = jnp.pad(kf, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vf = jnp.pad(vf, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kf = kf.reshape(B, Hkv, nchunk, chunk, hd).transpose(2, 0, 1, 3, 4)
+    vf = vf.reshape(B, Hkv, nchunk, chunk, hd).transpose(2, 0, 1, 3, 4)
+    q_pos = q_offset + jnp.arange(Sq)
+    valid_len = Skv if kv_valid_len is None else kv_valid_len
+
+    def step(carry, inp):
+        acc, m, l = carry
+        idx, kc, vc = inp                     # kc: (B, Hkv, chunk, hd)
+        if kc.dtype.itemsize == 1:            # f8-quantized KV: dequant chunk
+            kc = kc.astype(jnp.bfloat16)
+            vc = vc.astype(jnp.bfloat16)
+        kv_pos = idx * chunk + jnp.arange(chunk)
+        kq = jnp.repeat(kc, group, axis=1)    # (B, Hq, chunk, hd)
+        vq = jnp.repeat(vc, group, axis=1)
+        s = jnp.einsum("bhqd,bhcd->bhqc", qf, kq,
+                       preferred_element_type=jnp.float32)
+        mask = (kv_pos < valid_len)[None, None, None, :]
+        if causal:
+            mask = mask & (kv_pos[None, None, None, :] <= q_pos[None, None, :, None])
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqc,bhcd->bhqd", p.astype(vq.dtype), vq,
+            preferred_element_type=jnp.float32)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((B, Hq, Sq, hd), jnp.float32)
+    m0 = jnp.full((B, Hq, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Hq, Sq), jnp.float32)
+    step = jax.checkpoint(step, policy=jax.checkpoint_policies.nothing_saveable)
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0),
+                                  (jnp.arange(nchunk), kf, vf))
+    if return_stats:
+        return acc, m, l
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def flash_decode_attention(q, ck, cv, pos, opts: RunOptions):
+    """Decode attention over a sequence-sharded KV cache WITHOUT gathering
+    it: each model-shard computes online-softmax partials over its local
+    S-slice; the combine is a pmax/psum of (B, Hq, 1[, hd]) stats — per-layer
+    comm drops from O(B*S*Hkv*hd) to O(B*Hq*hd).
+
+    q: (B, 1, Hq, hd) replicated over 'model'; ck/cv: (B, S, Hkv, hd) with S
+    sharded over 'model'. Requires an ambient mesh with a 'model' axis.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    names = mesh.axis_names
+    batch_axes = tuple(n for n in names if n in ("pod", "data"))
+    from jax.sharding import PartitionSpec as P
+
+    def local_attn(q_loc, k_loc, v_loc, pos_):
+        S_loc = k_loc.shape[1]
+        shard = jax.lax.axis_index("model")
+        offset = shard * S_loc
+        valid = jnp.clip(pos_ + 1 - offset, 0, S_loc)
+        acc, m, l = chunked_attention(
+            q_loc, k_loc, v_loc, causal=False, q_offset=0,
+            chunk=min(opts.attn_chunk, S_loc), kv_valid_len=valid,
+            return_stats=True)
+        # handle empty shards (valid == 0): m = -inf, acc = 0, l = 0 already
+        m_g = jax.lax.pmax(m, "model")
+        scale = jnp.exp(m - m_g)
+        acc = jax.lax.psum(acc * scale[..., None], "model")
+        l = jax.lax.psum(l * scale, "model")
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 2, 1, 3).astype(q_loc.dtype)
+
+    qs = P(batch_axes if batch_axes else None, None, None, None)
+    kvs = P(batch_axes if batch_axes else None, "model", None, None)
+    return jax.shard_map(local_attn, mesh=mesh,
+                         in_specs=(qs, kvs, kvs, P()),
+                         out_specs=qs, check_vma=False)(q, ck, cv, pos)
+
+
+def _attention(q, k, v, *, causal, q_offset, opts: RunOptions, kv_valid_len=None):
+    if opts.kernel_backend in ("pallas", "interpret"):
+        from ..kernels.flash_attention.ops import gqa_attention
+        return gqa_attention(q, k, v, causal=causal, backend=opts.kernel_backend)
+    return chunked_attention(q, k, v, causal=causal, q_offset=q_offset,
+                             kv_valid_len=kv_valid_len,
+                             chunk=min(opts.attn_chunk, k.shape[1]))
+
+
+def swiglu(x, w_gate, w_up, w_down, constrain):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    h = constrain(h, ("batch", None, "tensor"))
+    return h @ w_down
+
+
+# ----------------------------------------------------------------------
+# forward
+# ----------------------------------------------------------------------
+
+def _residual_axes(opts: RunOptions, S: int, tp_ok: bool):
+    """Residual-stream logical axes: sequence-parallel when enabled."""
+    if opts.seq_parallel and tp_ok and S > 1:
+        return ("batch", "seq", None)
+    return ("batch", None, None)
+
+
+def _layer(x, lp, cfg: LMConfig, opts: RunOptions, constrain, positions,
+           cache=None, res_axes=("batch", None, None)):
+    """One transformer block. cache: None or (k, v, pos) for decode."""
+    dt = _dtype(cfg)
+    B, S, D = x.shape
+    hd = cfg.hd
+    Hq = lp["wq"].shape[-1] // hd
+    Hkv = cfg.n_kv_heads
+
+    h = constrain(rmsnorm(x, lp["attn_norm"]), res_axes)
+    q = h @ lp["wq"].astype(dt)
+    k = h @ lp["wk"].astype(dt)
+    v = h @ lp["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + lp["bq"].astype(dt)
+        k = k + lp["bk"].astype(dt)
+        v = v + lp["bv"].astype(dt)
+    q = q.reshape(B, S, Hq, hd)
+    k = k.reshape(B, S, Hkv, hd)
+    v = v.reshape(B, S, Hkv, hd)
+    q = constrain(rope(q, positions, cfg.rope_theta),
+                  ("batch", None, "tensor", None))
+    k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is None:
+        attn = _attention(q, k, v, causal=True, q_offset=0, opts=opts)
+    else:
+        ck, cv, pos = cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, pos, 0, 0))
+        if opts.flash_decode and S == 1:
+            attn = flash_decode_attention(q, ck, cv, pos, opts)
+        else:
+            attn = _attention(q, ck, cv, causal=True, q_offset=pos, opts=opts,
+                              kv_valid_len=pos + S)
+        new_cache = (ck, cv)
+    attn = constrain(attn, ("batch", None, "tensor", None))
+    x = x + (attn.reshape(B, S, Hq * hd) @ lp["wo"].astype(dt))
+    x = constrain(x, res_axes)
+
+    h = constrain(rmsnorm(x, lp["ffn_norm"]), res_axes)
+    if cfg.moe is None:
+        f = swiglu(h, lp["w_gate"].astype(dt), lp["w_up"].astype(dt),
+                   lp["w_down"].astype(dt), constrain)
+        aux = jnp.float32(0.0)
+    else:
+        from .moe import moe_ffn
+        f, aux = moe_ffn(h, lp, cfg, constrain, groups=opts.moe_groups)
+    x = constrain(x + f, res_axes)
+    return x, new_cache, aux
+
+
+def lm_forward(params, tokens, cfg: LMConfig, opts: RunOptions, constrain,
+               positions=None):
+    """tokens: (B, S) int32 -> hidden states (B, S, D) + aux losses."""
+    dt = _dtype(cfg)
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    res_axes = _residual_axes(opts, S, S % 16 == 0)
+    x = params["embed"].astype(dt)[tokens]
+    x = constrain(x, res_axes)
+
+    L = cfg.n_layers
+    g = opts.layer_group if (opts.layer_group and L % opts.layer_group == 0) else 1
+    layers = params["layers"]
+    if opts.cast_params_early:
+        # cast the sharded f32 master to bf16 BEFORE the scan: the per-layer
+        # fsdp all-gathers then move bf16 (2x less ICI traffic) and the
+        # per-layer converts disappear. Gradients still flow to f32 masters.
+        layers = jax.tree.map(
+            lambda a: a.astype(dt) if a.dtype == jnp.float32 else a, layers)
+    if g > 1:  # stack layers in groups: remat carry saved once per group
+        layers = jax.tree.map(
+            lambda a: a.reshape((L // g, g) + a.shape[1:]), layers)
+
+    def body(carry, lp):
+        x, aux = carry
+        for i in range(g):
+            lpi = jax.tree.map(lambda a: a[i], lp) if g > 1 else lp
+            x, _, a = _layer(x, lpi, cfg, opts, constrain, positions,
+                             res_axes=res_axes)
+            aux = aux + a
+        return (x, aux), ()
+
+    layer_fn = body
+    if opts.remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if opts.remat_policy == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+        layer_fn = jax.checkpoint(body, policy=policy)
+    (x, aux), _ = jax.lax.scan(layer_fn, (x, jnp.float32(0.0)), layers)
+    x = rmsnorm(x, params["final_norm"])
+    return x, aux
+
+
+def lm_loss(params, tokens, targets, cfg: LMConfig, opts: RunOptions,
+            constrain):
+    """Chunked cross-entropy over the (tensor-sharded) vocab."""
+    x, aux = lm_forward(params, tokens, cfg, opts, constrain)
+    dt = _dtype(cfg)
+    unemb = (params["embed"].T if cfg.tie_embeddings
+             else params["unembed"]).astype(dt)
+    B, S, D = x.shape
+    C = min(opts.loss_chunk, S)
+    nchunk = S // C
+    xs = x.reshape(B, nchunk, C, D).transpose(1, 0, 2, 3)
+    ts = targets.reshape(B, nchunk, C).transpose(1, 0, 2)
+
+    def step(tot, inp):
+        xc, tc = inp
+        logits = (xc @ unemb).astype(jnp.float32)      # (B, C, V)
+        logits = constrain(logits, ("batch", None, "tensor"))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(lse - gold), ()
+
+    step = jax.checkpoint(step, policy=jax.checkpoint_policies.nothing_saveable)
+    tot, _ = jax.lax.scan(step, jnp.float32(0.0), (xs, ts))
+    ntok = B * S
+    loss = tot / ntok
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * aux / max(cfg.n_layers, 1)
+    return loss
+
+
+# ----------------------------------------------------------------------
+# serving: prefill + decode
+# ----------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    L, Hkv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((L, batch, max_len, Hkv, hd), dtype),
+        "v": jnp.zeros((L, batch, max_len, Hkv, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_logical(wide: bool = False) -> dict:
+    seq = "seq_kv_wide" if wide else "seq_kv"
+    b = None if wide else "batch"
+    return {"k": (None, b, seq, None, None),
+            "v": (None, b, seq, None, None),
+            "pos": ()}
+
+
+def prefill(params, tokens, cfg: LMConfig, opts: RunOptions, constrain):
+    """Full forward over the prompt; returns last-position logits."""
+    x, _ = lm_forward(params, tokens, cfg, opts, constrain)
+    dt = _dtype(cfg)
+    unemb = (params["embed"].T if cfg.tie_embeddings
+             else params["unembed"]).astype(dt)
+    logits = (x[:, -1:] @ unemb).astype(jnp.float32)
+    return constrain(logits, ("batch", None, "tensor"))
+
+
+def decode_step(params, token, cache, cfg: LMConfig, opts: RunOptions,
+                constrain):
+    """One token with KV cache. token: (B, 1) int32. Returns (logits, cache)."""
+    dt = _dtype(cfg)
+    B = token.shape[0]
+    pos = cache["pos"]
+    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+    x = params["embed"].astype(dt)[token]
+    x = constrain(x, ("batch", None, None))
+
+    def body(x, lp_and_cache):
+        lp, ck, cv = lp_and_cache
+        x, new_kv, _ = _layer(x, lp, cfg, opts, constrain, positions,
+                              cache=(ck, cv, pos))
+        return x, new_kv
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"],
+                                         cache["v"]))
+    x = rmsnorm(x, params["final_norm"])
+    unemb = (params["embed"].T if cfg.tie_embeddings
+             else params["unembed"]).astype(dt)
+    logits = (x @ unemb).astype(jnp.float32)
+    logits = constrain(logits, ("batch", None, "tensor"))
+    new_cache = {"k": nk, "v": nv, "pos": pos + 1}
+    return logits, new_cache

@@ -1,0 +1,5 @@
+from .adamw import adamw_init, adamw_update, cosine_schedule
+from .compress import compress_int8, decompress_int8, ef_compressed_psum
+
+__all__ = ["adamw_init", "adamw_update", "cosine_schedule",
+           "compress_int8", "decompress_int8", "ef_compressed_psum"]

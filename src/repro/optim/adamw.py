@@ -1,0 +1,57 @@
+"""AdamW + global-norm clipping + cosine schedule (pure jax, pytree-generic).
+
+Optimizer state mirrors the parameter pytree (m, v in f32) so pjit shards it
+exactly like the (ZeRO-sharded) parameters.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine_schedule"]
+
+
+class AdamWState(NamedTuple):
+    m: dict
+    v: dict
+    count: jax.Array
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros),
+                      count=jnp.zeros((), jnp.int32))
+
+
+def cosine_schedule(step, base_lr=3e-4, warmup=100, total=10_000, min_frac=0.1):
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * jnp.where(step < warmup, warm, cos)
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1, clip_norm=1.0):
+    """Returns (new_params, new_state, metrics). All math in f32."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+
+    count = state.count + 1
+    c = count.astype(jnp.float32)
+    m = jax.tree.map(lambda mo, g: b1 * mo + (1 - b1) * g, state.m, grads)
+    v = jax.tree.map(lambda vo, g: b2 * vo + (1 - b2) * g * g, state.v, grads)
+    mh = jax.tree.map(lambda x: x / (1 - b1 ** c), m)
+    vh = jax.tree.map(lambda x: x / (1 - b2 ** c), v)
+
+    def upd(p, mh_, vh_):
+        step = lr * (mh_ / (jnp.sqrt(vh_) + eps) + weight_decay * p.astype(jnp.float32))
+        return (p.astype(jnp.float32) - step).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mh, vh)
+    return new_params, AdamWState(m=m, v=v, count=count), {"grad_norm": gnorm}

@@ -1,0 +1,47 @@
+"""int8 error-feedback gradient compression for the cross-pod all-reduce.
+
+Cross-pod links are the scarcest bandwidth at 1000+ node scale (DCN between
+pods vs ICI within). We compress pod-axis gradient all-reduces to int8 with
+per-tensor scales and error feedback (the residual of quantization is
+carried to the next step), following 1-bit Adam / EF-SGD practice: unbiased
+enough for Adam while cutting cross-pod bytes 4x vs f32 (2x vs bf16).
+
+Used inside shard_map over the "pod" axis; within-pod reduction stays full
+precision (ICI is cheap).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress_int8", "decompress_int8", "ef_compressed_psum"]
+
+
+def compress_int8(x: jax.Array):
+    """x (f32/bf16) -> (int8 codes, scale). Symmetric per-tensor scale."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    codes = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def decompress_int8(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    return codes.astype(jnp.float32) * scale
+
+
+def ef_compressed_psum(grad: jax.Array, error: jax.Array, axis_name: str):
+    """Error-feedback int8 all-reduce over `axis_name`.
+
+    Returns (reduced_grad_f32, new_error). Call per gradient leaf inside
+    shard_map; `error` is the persistent per-leaf EF buffer.
+    """
+    g = grad.astype(jnp.float32) + error
+    # shared quantization grid: pmax of local scales (one scalar all-reduce),
+    # so that psum of int codes is exact in the shared grid.
+    amax = jnp.max(jnp.abs(g))
+    smax = jax.lax.pmax(jnp.maximum(amax, 1e-12) / 127.0, axis_name)
+    codes = jnp.clip(jnp.round(g / smax), -127, 127)
+    reduced = jax.lax.psum(codes.astype(jnp.int32), axis_name).astype(jnp.float32) * smax
+    new_error = g - codes.astype(jnp.float32) * smax  # EF: what was actually sent
+    return reduced, new_error

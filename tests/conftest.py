@@ -1,0 +1,14 @@
+import os
+import sys
+
+# Tests run on the real single CPU device — never set the 512-device flag
+# here (that is exclusively dryrun.py's job).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,110 @@
+"""Engine correctness: every mode vs the brute-force DFS oracle, plus
+result-set invariants as hypothesis properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BatchPathEngine, EngineConfig
+from repro.core.graph import Graph
+from repro.core import generators
+from repro.core.oracle import enumerate_paths_bruteforce, path_set
+
+MODES = ["basic", "basic+", "batch", "batch+", "pathenum"]
+
+
+def _run_and_compare(g, qs, mode, cfg=None):
+    eng = BatchPathEngine(g, cfg or EngineConfig(min_cap=64))
+    res = eng.process(qs, mode=mode)
+    for qi, (s, t, k) in enumerate(qs):
+        got_list = [tuple(int(x) for x in row if x >= 0)
+                    for row in res.paths[qi]]
+        got = set(got_list)
+        truth = path_set(enumerate_paths_bruteforce(g, s, t, k))
+        assert len(got_list) == len(got), f"{mode} q{qi}: duplicate paths"
+        assert got == truth, (f"{mode} q{qi}: {len(got)} vs {len(truth)}; "
+                              f"missing {sorted(truth - got)[:3]} "
+                              f"extra {sorted(got - truth)[:3]}")
+    return res
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_modes_match_oracle_erdos(mode):
+    g = generators.erdos(70, 3.0, seed=1)
+    qs = generators.random_queries(g, 6, (2, 5), seed=2)
+    _run_and_compare(g, qs, mode)
+
+
+@pytest.mark.parametrize("mode", ["basic", "batch", "batch+"])
+def test_modes_match_oracle_powerlaw(mode):
+    g = generators.powerlaw(120, 3.0, seed=3)
+    qs = generators.random_queries(g, 6, (3, 5), seed=4)
+    _run_and_compare(g, qs, mode)
+
+
+def test_batch_community_high_similarity():
+    """Community graphs: heavy sharing; paper-faithful shared-node setting."""
+    g = generators.community(90, n_comm=3, avg_deg=4.0, seed=5)
+    qs = generators.similar_queries(g, 8, similarity=0.9, k_range=(3, 4),
+                                    seed=6)
+    res = _run_and_compare(g, qs, "batch",
+                           EngineConfig(min_cap=64,
+                                        paper_faithful_shares=True))
+    assert res.stats["n_clusters"] >= 1
+
+
+def test_k_edge_cases():
+    g = generators.erdos(40, 3.0, seed=7)
+    qs = generators.random_queries(g, 5, (1, 2), seed=8)
+    for mode in ["basic", "batch"]:
+        _run_and_compare(g, qs, mode)
+
+
+def test_duplicate_and_nested_queries():
+    g = generators.erdos(50, 3.0, seed=9)
+    base = generators.random_queries(g, 3, (3, 4), seed=10)
+    qs = base + [base[0], (base[1][0], base[1][1], 2)]
+    _run_and_compare(g, qs, "batch")
+
+
+def test_rejects_degenerate_queries():
+    g = generators.erdos(20, 2.0, seed=11)
+    eng = BatchPathEngine(g)
+    with pytest.raises(ValueError):
+        eng.process([(3, 3, 4)])
+    with pytest.raises(ValueError):
+        eng.process([(0, 1, 0)])
+
+
+@given(st.integers(10, 60), st.integers(10, 160), st.integers(0, 30),
+       st.integers(2, 5))
+@settings(max_examples=12, deadline=None)
+def test_property_batch_equals_oracle(n, m, seed, k):
+    """Property: for ANY random digraph and query set, batch mode returns
+    exactly the oracle's simple-path set (no dupes, no misses)."""
+    r = np.random.default_rng(seed)
+    g = Graph.from_edges(n, r.integers(0, n, m), r.integers(0, n, m))
+    pairs = set()
+    while len(pairs) < 4:
+        s, t = int(r.integers(0, n)), int(r.integers(0, n))
+        if s != t:
+            pairs.add((s, t))
+    qs = [(s, t, k) for s, t in pairs]
+    _run_and_compare(g, qs, "batch")
+
+
+@given(st.integers(0, 20))
+@settings(max_examples=8, deadline=None)
+def test_property_results_are_simple_and_bounded(seed):
+    g = generators.powerlaw(80, 3.0, seed=seed)
+    qs = generators.random_queries(g, 4, (3, 5), seed=seed + 50)
+    eng = BatchPathEngine(g, EngineConfig(min_cap=64))
+    res = eng.process(qs, mode="batch")
+    edge_set = {(int(s), int(t)) for s in range(g.n) for t in g.neighbors(s)}
+    for qi, (s, t, k) in enumerate(qs):
+        for row in res.paths[qi]:
+            p = [int(x) for x in row if x >= 0]
+            assert p[0] == s and p[-1] == t
+            assert len(p) - 1 <= k                      # hop constraint
+            assert len(set(p)) == len(p)                # simple
+            for a, b in zip(p, p[1:]):                  # real edges
+                assert (a, b) in edge_set

@@ -1,0 +1,90 @@
+"""Graph container + generator invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import Graph, DeviceGraph
+from repro.core import generators
+
+
+def random_graph(n, m, seed):
+    r = np.random.default_rng(seed)
+    return Graph.from_edges(n, r.integers(0, n, m), r.integers(0, n, m))
+
+
+class TestGraph:
+    def test_csr_roundtrip(self):
+        g = Graph.from_edges(4, [0, 0, 1, 2], [1, 2, 2, 3])
+        assert g.n == 4 and g.m == 4
+        assert list(g.neighbors(0)) == [1, 2]
+        assert list(g.neighbors(2, reverse=True)) == [0, 1]
+
+    def test_dedup_and_self_loops(self):
+        g = Graph.from_edges(3, [0, 0, 1, 1], [1, 1, 1, 2])
+        assert g.m == 2  # dup (0,1) removed, self loop (1,1) removed
+
+    @given(st.integers(5, 60), st.integers(0, 200), st.integers(0, 5))
+    @settings(max_examples=25, deadline=None)
+    def test_reverse_is_involution(self, n, m, seed):
+        g = random_graph(n, m, seed)
+        gr = g.reverse()
+        assert np.array_equal(gr.indptr, g.r_indptr)
+        for v in range(n):
+            assert sorted(gr.neighbors(v)) == sorted(g.neighbors(v, reverse=True))
+
+    @given(st.integers(5, 60), st.integers(1, 200), st.integers(0, 5))
+    @settings(max_examples=25, deadline=None)
+    def test_ell_covers_all_edges(self, n, m, seed):
+        g = random_graph(n, m, seed)
+        ell = g.ell()
+        edges = set()
+        for v in range(n):
+            for d in range(ell.cap):
+                if ell.mask[v, d]:
+                    edges.add((v, int(ell.idx[v, d])))
+        truth = {(int(s), int(t)) for s in range(n)
+                 for t in g.neighbors(s)}
+        assert edges == truth
+        assert ell.spill_src.size == 0
+
+    def test_ell_spill(self):
+        g = Graph.from_edges(5, [0, 0, 0, 0], [1, 2, 3, 4])
+        ell = g.ell(cap=2)
+        assert ell.spill_src.size == 2
+        assert set(ell.spill_dst) | {int(x) for x in ell.idx[0] if x != 5} \
+            == {1, 2, 3, 4}
+
+    def test_edges_by_dst_sorted(self):
+        g = random_graph(30, 100, 1)
+        src, dst = g.edges_by_dst
+        assert np.all(np.diff(dst) >= 0)
+        assert src.shape == dst.shape == (g.m,)
+
+    def test_device_graph(self):
+        g = random_graph(20, 60, 2)
+        dg = DeviceGraph.build(g)
+        assert dg.n == g.n and dg.m == g.m
+        assert dg.ell_idx.shape[0] == g.n
+
+
+class TestGenerators:
+    @pytest.mark.parametrize("gen,kw", [
+        (generators.powerlaw, {}), (generators.erdos, {}),
+        (generators.community, {"n_comm": 3})])
+    def test_generators_basic(self, gen, kw):
+        g = gen(200, avg_deg=4.0, seed=3, **kw)
+        assert g.n == 200
+        assert 0 < g.m <= 200 * 4.5
+        assert g.indices.max() < 200
+
+    def test_grid_degree(self):
+        g = generators.grid(5)
+        assert g.n == 25
+        assert np.all(g.out_degree() == 4)
+
+    def test_random_queries_reachable(self):
+        from repro.core.oracle import bfs_dist_from
+        g = generators.erdos(100, 4.0, seed=4)
+        qs = generators.random_queries(g, 10, (2, 5), seed=5)
+        for s, t, k in qs:
+            assert bfs_dist_from(g, s, k)[t] <= k
