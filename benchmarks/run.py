@@ -9,12 +9,13 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 from pathlib import Path
 
 from . import (exp1_similarity, exp2_batch_size, exp3_decomposition,
                exp4_gamma, exp5_scalability, exp6_ksp, exp7_path_counts,
-               kernels_bench)
+               exp8_cross_batch, kernels_bench)
 from .common import RESULTS
 
 ALL = {
@@ -25,6 +26,7 @@ ALL = {
     "exp5": exp5_scalability.main,
     "exp6": exp6_ksp.main,
     "exp7": exp7_path_counts.main,
+    "exp8": exp8_cross_batch.main,
     "kernels": kernels_bench.main,
 }
 
@@ -40,16 +42,20 @@ def main() -> None:
     print("name,us_per_call,derived")
     t0 = time.perf_counter()
     detail = {}
+    failed = []
     for name in chosen:
         try:
             detail[name] = ALL[name](args.scale)
         except Exception as e:  # noqa: BLE001
             print(f"{name}_FAILED,0,{type(e).__name__}:{e}")
+            failed.append(name)
     out = Path("results/benchmarks.json")
     out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(json.dumps({"rows": RESULTS, "detail": detail},
                               indent=1, default=str))
     print(f"# total {time.perf_counter() - t0:.1f}s -> {out}")
+    if failed:   # CI smoke jobs must see a nonzero exit, not a green FAILED row
+        sys.exit(f"failed experiments: {', '.join(failed)}")
 
 
 if __name__ == "__main__":

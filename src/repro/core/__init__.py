@@ -1,9 +1,10 @@
 """Core: batch HC-s-t simple path query processing (the paper's contribution)."""
 from .graph import Graph, DeviceGraph
+from .cache import SharedPathCache
 from .engine import BatchPathEngine, EngineConfig, EngineOverflow, BatchResult
 from .index import build_index, QueryIndex
 from . import generators, oracle
 
 __all__ = ["Graph", "DeviceGraph", "BatchPathEngine", "EngineConfig",
-           "EngineOverflow", "BatchResult", "build_index", "QueryIndex",
-           "generators", "oracle"]
+           "EngineOverflow", "BatchResult", "SharedPathCache",
+           "build_index", "QueryIndex", "generators", "oracle"]

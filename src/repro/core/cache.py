@@ -1,0 +1,187 @@
+"""Cross-batch shared HC-s path cache (persistent Ψ-node result store).
+
+Within one batch the engine reuses materialized HC-s path queries via the
+sharing graph Ψ; everything is thrown away when the batch ends. Real
+serving workloads repeat themselves — consecutive batches from the same
+traffic overlap heavily — so this module persists the per-level ``PathSet``
+results of every Ψ node *across* batches, keyed by a canonical query
+signature. A later batch whose plan contains an identical node skips
+materialization entirely and re-uploads the host-pinned copy.
+
+Canonical cache key::
+
+    (direction, source, budget, slack_signature, stop_vertex)
+
+* ``direction``        -- "f" (enumerate on G) or "b" (on G_r).
+* ``source, budget``   -- the HC-s path query itself: all simple paths of
+                          length <= budget starting at ``source``.
+* ``slack_signature``  -- sorted tuple of ``(endpoint, remaining_hops)``
+                          pairs over the node's consumers. The engine's
+                          slack prune is ``slack[v] = max_c (k_c - off_c -
+                          dist(v, endpoint_c))``, which is a pure function
+                          of these pairs and the (fixed) graph, so equal
+                          signatures imply identical pruned result sets.
+* ``stop_vertex``      -- the dedicated-node early-stop target (-2 when
+                          disabled); it changes the materialized levels so
+                          it must be part of the key.
+
+Entries are stored host-side (``HostPathSet``) with byte-accurate
+accounting; the cache is a bytes-budgeted LRU. It is only valid for one
+graph: any mutation must call :meth:`SharedPathCache.invalidate`
+(``BatchPathEngine.set_graph`` does this automatically). Not thread-safe;
+each engine/replica group owns its cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter, OrderedDict
+from typing import Iterable, Optional
+
+from .pathset import HostPathSet, PathSet, offload, upload
+
+__all__ = ["SharedPathCache", "CacheStats", "node_signature",
+           "dedicated_keys", "DEFAULT_CACHE_BYTES"]
+
+DEFAULT_CACHE_BYTES = 256 << 20
+
+CacheKey = tuple  # (direction, source, budget, slack_signature, stop_vertex)
+
+
+def node_signature(direction: str, src: int, budget: int,
+                   consumers: Iterable[tuple[int, int]],
+                   endpoints: dict[int, tuple[int, int]]) -> tuple:
+    """Canonical signature of a Ψ node (without the engine's stop vertex).
+
+    consumers : (query_idx, min_offset) pairs as built by detect.py.
+    endpoints : query_idx -> (endpoint_vertex, k) for this direction
+                (forward: (q.t, q.k); backward: (q.s, q.k)).
+    """
+    sig = tuple(sorted({(int(endpoints[qi][0]), int(endpoints[qi][1]) - int(off))
+                        for qi, off in consumers}))
+    return (direction, int(src), int(budget), sig)
+
+
+def dedicated_keys(s: int, t: int, k: int) -> tuple[CacheKey, CacheKey]:
+    """Full cache keys of the two halves of query (s, t, k) when it runs as
+    its own singleton cluster with the default midpoint split. This pins the
+    engine's key format (tests assert engine-inserted keys match); admission
+    warmth probes use the cheaper :meth:`SharedPathCache.has_root` instead.
+    Hard-codes ``a = (k+1)//2`` — out of sync if cost-based "+" splits are
+    used."""
+    a = (k + 1) // 2
+    b = k - a
+    fkey = ("f", int(s), a, ((int(t), int(k)),), int(t))
+    bkey = ("b", int(t), b, ((int(s), int(k)),), int(s))
+    return fkey, bkey
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    inserts: int = 0
+    evictions: int = 0
+    invalidations: int = 0
+    oversize_skips: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class _Entry:
+    levels: list[HostPathSet]
+    nbytes: int
+
+
+class SharedPathCache:
+    """Bytes-budgeted LRU over host-pinned Ψ-node results."""
+
+    def __init__(self, budget_bytes: int = DEFAULT_CACHE_BYTES):
+        if budget_bytes <= 0:
+            raise ValueError("budget_bytes must be positive")
+        self.budget_bytes = int(budget_bytes)
+        self._entries: "OrderedDict[CacheKey, _Entry]" = OrderedDict()
+        self._roots: Counter = Counter()   # (direction, src) -> live entries
+        self._nbytes = 0
+        self.epoch = 0
+        self.stats = CacheStats()
+
+    # -- queries -------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def nbytes(self) -> int:
+        return self._nbytes
+
+    def contains(self, key: CacheKey) -> bool:
+        """Probe without touching LRU order or hit/miss stats."""
+        return key in self._entries
+
+    def has_root(self, direction: str, src: int) -> bool:
+        """Is ANY entry enumerated from (direction, src) warm? Cheap probe
+        for cache-aware admission: a plan rooting a half-query here has a
+        chance to hit regardless of the consumer-set details."""
+        return self._roots[(direction, int(src))] > 0
+
+    def get(self, key: CacheKey) -> Optional[list[PathSet]]:
+        """Device copies of the cached per-level PathSets, or None on miss.
+
+        Each call re-uploads from the host copy (device memory for cached
+        nodes is owned by the batch, not the cache).
+        """
+        entry = self._entries.get(key)
+        if entry is None:
+            self.stats.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.stats.hits += 1
+        return [upload(h) for h in entry.levels]
+
+    # -- updates -------------------------------------------------------
+    def put(self, key: CacheKey, levels: list[PathSet]) -> None:
+        """Insert (or refresh) a materialized node; evicts LRU to fit."""
+        # size is known from the device shapes — reject oversize entries
+        # before paying the device->host transfer (they recur every batch)
+        nbytes = sum(4 * ps.verts.shape[0] * ps.verts.shape[1] + 16
+                     for ps in levels)
+        if nbytes > self.budget_bytes:
+            self.stats.oversize_skips += 1
+            return
+        host = [offload(ps) for ps in levels]
+        nbytes = sum(h.nbytes for h in host)
+        old = self._entries.pop(key, None)
+        if old is not None:
+            self._nbytes -= old.nbytes
+            self._drop_root(key)
+        while self._nbytes + nbytes > self.budget_bytes and self._entries:
+            ekey, evicted = self._entries.popitem(last=False)
+            self._nbytes -= evicted.nbytes
+            self._drop_root(ekey)
+            self.stats.evictions += 1
+        self._entries[key] = _Entry(levels=host, nbytes=nbytes)
+        self._roots[key[:2]] += 1
+        self._nbytes += nbytes
+        self.stats.inserts += 1
+
+    def _drop_root(self, key: CacheKey) -> None:
+        # delete zero counts: root churn must not grow the Counter forever
+        root = key[:2]
+        self._roots[root] -= 1
+        if self._roots[root] <= 0:
+            del self._roots[root]
+
+    def invalidate(self) -> None:
+        """Graph mutation hook: drop every entry and start a new epoch."""
+        self._entries.clear()
+        self._roots.clear()
+        self._nbytes = 0
+        self.epoch += 1
+        self.stats.invalidations += 1
+
+    # -- reporting -----------------------------------------------------
+    def info(self) -> dict:
+        return {"entries": len(self._entries), "nbytes": self._nbytes,
+                "budget_bytes": self.budget_bytes, "epoch": self.epoch,
+                **self.stats.as_dict()}

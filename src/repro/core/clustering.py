@@ -7,19 +7,30 @@ of recomputing δ from scratch each round.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import numpy as np
 
 __all__ = ["cluster_queries"]
 
 
-def cluster_queries(mu: np.ndarray, gamma: float) -> list[list[int]]:
+def cluster_queries(mu: np.ndarray, gamma: float,
+                    bias: Optional[np.ndarray] = None) -> list[list[int]]:
     """Cluster query ids 0..Q-1 on the μ matrix; stop when max δ <= γ.
+
+    bias : optional (Q, Q) symmetric additive bonus applied to μ before
+           linkage — the streaming server uses it to pull queries into
+           clusters whose shared HC-s path results are already warm in the
+           cross-batch cache (cache-aware admission). The biased similarity
+           is clipped back to [0, 1] so γ keeps its meaning.
 
     Returns a partition (list of clusters, each a list of query indices).
     """
     Q = mu.shape[0]
     clusters: dict[int, list[int]] = {i: [i] for i in range(Q)}
     delta = mu.astype(np.float64).copy()
+    if bias is not None:
+        delta = np.clip(delta + np.asarray(bias, np.float64), 0.0, 1.0)
     np.fill_diagonal(delta, -np.inf)
     alive = list(range(Q))
     while len(alive) > 1:

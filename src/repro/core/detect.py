@@ -31,6 +31,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from .cache import node_signature
 from .graph import Graph
 
 __all__ = ["PlanNode", "DirectionPlan", "detect_common_queries"]
@@ -46,6 +47,9 @@ class PlanNode:
     out_edges: list[int] = dataclasses.field(default_factory=list)  # parents splicing us
     consumers: list[tuple[int, int]] = dataclasses.field(default_factory=list)
     # consumers: (query_idx, min_offset) pairs for slack construction
+    signature: Optional[tuple] = None
+    # canonical HC-s query signature (direction, src, budget, slack-sig);
+    # set when endpoints are provided — the cross-batch cache key prefix
 
 
 @dataclasses.dataclass
@@ -61,7 +65,9 @@ def detect_common_queries(g: Graph, cluster: Sequence[int],
                           hop_ok: np.ndarray,
                           *, reverse: bool,
                           min_shared_budget: int = 2,
-                          max_frontier: int = 1 << 22) -> DirectionPlan:
+                          max_frontier: int = 1 << 22,
+                          endpoints: Optional[dict[int, tuple[int, int]]] = None,
+                          ) -> DirectionPlan:
     """Build the sharing plan for one cluster and one direction.
 
     halves : query idx -> (source_vertex, budget) for this direction
@@ -69,6 +75,10 @@ def detect_common_queries(g: Graph, cluster: Sequence[int],
     hop_ok : (n,) bool loose reachability filter ("meets the hop
              constraint", Alg 3 line 20) — vertices that can still reach
              some cluster endpoint.
+    endpoints : optional query idx -> (endpoint_vertex, k) for this
+             direction (forward: (q.t, q.k); backward: (q.s, q.k)). When
+             given, every PlanNode gets a canonical ``signature`` usable
+             as a cross-batch cache key prefix.
     """
     indptr = g.r_indptr if reverse else g.indptr
     indices = g.r_indices if reverse else g.indices
@@ -211,6 +221,12 @@ def detect_common_queries(g: Graph, cluster: Sequence[int],
             if qi not in best or off < best[qi]:
                 best[qi] = off
         node.consumers = sorted(best.items())
+
+    if endpoints is not None:
+        direction = "b" if reverse else "f"
+        for node in nodes:
+            node.signature = node_signature(direction, node.src, node.budget,
+                                            node.consumers, endpoints)
 
     return DirectionPlan(nodes=nodes, topo=topo,
                          half_of_query=half_of_query, n_shared=n_shared)

@@ -16,6 +16,7 @@ from typing import Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from .cache import SharedPathCache
 from .graph import DeviceGraph, Graph
 from .index import QueryIndex, build_index, slack_from_dists, walk_counts
 from .pathset import PathSet, concat, empty, singleton, to_host
@@ -23,7 +24,7 @@ from .enumerate import expand_level, extract_rows, select_ending_at
 from .join import cross_join, keyed_join, sort_by_last
 from .similarity import similarity_matrix
 from .clustering import cluster_queries
-from .detect import DirectionPlan, detect_common_queries
+from .detect import DirectionPlan, PlanNode, detect_common_queries
 
 __all__ = ["EngineConfig", "BatchPathEngine", "EngineOverflow", "BatchResult"]
 
@@ -47,6 +48,7 @@ class EngineConfig:
     edge_chunk: int = 1 << 22
     plan_caps: bool = True          # DP-based capacity planning
     paper_faithful_shares: bool = False  # min_shared_budget -> 0
+    cache_bytes: int = 0            # >0: cross-batch SharedPathCache budget
 
 
 @dataclasses.dataclass
@@ -68,19 +70,32 @@ def _bucket(x: int, min_cap: int = 256) -> int:
 
 
 class BatchPathEngine:
-    def __init__(self, graph: Graph, config: Optional[EngineConfig] = None):
+    def __init__(self, graph: Graph, config: Optional[EngineConfig] = None,
+                 cache: Optional[SharedPathCache] = None):
         self.g = graph
         self.cfg = config or EngineConfig()
         self.dg = DeviceGraph.build(graph)
-        self._host_dists: dict = {}
+        self._host_dists: Optional[tuple] = None   # (index, (dist_s, dist_t))
+        if cache is None and self.cfg.cache_bytes > 0:
+            cache = SharedPathCache(self.cfg.cache_bytes)
+        self.cache = cache
+
+    def set_graph(self, graph: Graph) -> None:
+        """Swap the graph after a mutation: rebuild device views and drop
+        every piece of graph-derived state (host dists, cross-batch cache)."""
+        self.g = graph
+        self.dg = DeviceGraph.build(graph)
+        self._host_dists = None
+        if self.cache is not None:
+            self.cache.invalidate()
 
     def _dists_host(self, index: QueryIndex):
-        key = id(index)
-        if key not in self._host_dists:
-            self._host_dists.clear()
-            self._host_dists[key] = (np.asarray(index.dist_s),
-                                     np.asarray(index.dist_t))
-        return self._host_dists[key]
+        # memoized per index OBJECT: keep a strong reference so a freed
+        # index's id can never be reused to serve stale distances
+        if self._host_dists is None or self._host_dists[0] is not index:
+            self._host_dists = (index, (np.asarray(index.dist_s),
+                                        np.asarray(index.dist_t)))
+        return self._host_dists[1]
 
     @staticmethod
     def _slack_np(dist_cols: np.ndarray, ks: np.ndarray,
@@ -95,8 +110,15 @@ class BatchPathEngine:
     # ------------------------------------------------------------------
     # public API
     # ------------------------------------------------------------------
-    def process(self, queries: Sequence[Query], mode: str = "batch") -> BatchResult:
-        """mode: 'basic' | 'basic+' | 'batch' | 'batch+' | 'pathenum'."""
+    def process(self, queries: Sequence[Query], mode: str = "batch",
+                clusters: Optional[list[list[int]]] = None) -> BatchResult:
+        """mode: 'basic' | 'basic+' | 'batch' | 'batch+' | 'pathenum'.
+
+        clusters : optional precomputed partition of query indices (batch
+        modes only). The caller — e.g. the streaming server, which clusters
+        with a cache-aware bias — keeps its grouping instead of this method
+        re-running similarity + clustering over the same queries.
+        """
         queries = [(int(s), int(t), int(k)) for s, t, k in queries]
         for s, t, k in queries:
             if s == t:
@@ -112,7 +134,7 @@ class BatchPathEngine:
         index.dist_s.block_until_ready()
         stats["t_build_index"] = time.perf_counter() - t0
         if mode.startswith("batch"):
-            return self._run_batch(queries, index, plus, stats)
+            return self._run_batch(queries, index, plus, stats, clusters)
         return self._run_basic(queries, index, plus, stats)
 
     # ------------------------------------------------------------------
@@ -155,45 +177,61 @@ class BatchPathEngine:
     # ------------------------------------------------------------------
     # BatchEnum (Alg 4): cluster -> detect -> shared enumeration
     # ------------------------------------------------------------------
-    def _run_batch(self, queries, index: QueryIndex, plus: bool, stats) -> BatchResult:
+    def _run_batch(self, queries, index: QueryIndex, plus: bool, stats,
+                   clusters: Optional[list[list[int]]] = None) -> BatchResult:
         t0 = time.perf_counter()
-        mu = similarity_matrix(index, backend=self.cfg.backend)
-        clusters = cluster_queries(mu, self.cfg.gamma)
+        if clusters is None:
+            mu = similarity_matrix(index, backend=self.cfg.backend)
+            clusters = cluster_queries(mu, self.cfg.gamma)
+            stats["mu_mean"] = float((mu.sum() - len(queries)) /
+                                     max(len(queries) * (len(queries) - 1), 1))
+        else:
+            seen = [qi for cl in clusters for qi in cl]
+            if sorted(seen) != list(range(len(queries))):
+                raise ValueError("clusters must partition the query indices")
         stats["t_cluster"] = time.perf_counter() - t0
         stats["n_clusters"] = len(clusters)
-        stats["mu_mean"] = float((mu.sum() - len(queries)) /
-                                 max(len(queries) * (len(queries) - 1), 1))
 
         min_sb = 0 if self.cfg.paper_faithful_shares else self.cfg.min_shared_budget
         results = {}
         t_detect = t_enum = 0.0
         n_shared_total = n_dedup_total = n_edges_total = 0
+        for key in ("n_psi_nodes", "n_materialized",
+                    "n_cache_hits", "n_cache_misses"):
+            stats[key] = 0
         for cluster in clusters:
             t0 = time.perf_counter()
             halves_f = {}
             halves_b = {}
+            ends_f = {}
+            ends_b = {}
             for qi in cluster:
                 s, t, k = queries[qi]
                 a, b = self._split(qi, index, plus)
                 halves_f[qi] = (s, a)
                 halves_b[qi] = (t, b)
+                ends_f[qi] = (t, k)
+                ends_b[qi] = (s, k)
             hop_f = self._hop_ok(index, cluster, forward=True)
             hop_b = self._hop_ok(index, cluster, forward=False)
             plan_f = detect_common_queries(self.g, cluster, halves_f, hop_f,
-                                           reverse=False, min_shared_budget=min_sb)
+                                           reverse=False, min_shared_budget=min_sb,
+                                           endpoints=ends_f)
             plan_b = detect_common_queries(self.g, cluster, halves_b, hop_b,
-                                           reverse=True, min_shared_budget=min_sb)
+                                           reverse=True, min_shared_budget=min_sb,
+                                           endpoints=ends_b)
             n_shared_total += plan_f.n_shared + plan_b.n_shared
-            n_dedup_total += 2 * len(cluster) - len(plan_f.half_of_query and
-                                                    set(plan_f.half_of_query.values())) \
-                - len(set(plan_b.half_of_query.values()))
+            # deduped half-queries: halves mapped onto an existing node,
+            # counted per direction (identical queries collapse entirely)
+            n_dedup_total += len(cluster) - len(set(plan_f.half_of_query.values()))
+            n_dedup_total += len(cluster) - len(set(plan_b.half_of_query.values()))
             n_edges_total += sum(len(n.in_edges) for n in plan_f.nodes)
             n_edges_total += sum(len(n.in_edges) for n in plan_b.nodes)
             t_detect += time.perf_counter() - t0
 
             t0 = time.perf_counter()
-            cache_f = self._run_plan(plan_f, index, forward=True)
-            cache_b = self._run_plan(plan_b, index, forward=False)
+            cache_f = self._run_plan(plan_f, index, forward=True, stats=stats)
+            cache_b = self._run_plan(plan_b, index, forward=False, stats=stats)
             assembled: dict = {}   # identical (halves, k) -> identical results
             for qi in cluster:
                 s, t, k = queries[qi]
@@ -217,36 +255,76 @@ class BatchPathEngine:
         return BatchResult(paths=results, stats=stats)
 
     # ------------------------------------------------------------------
-    # plan execution: materialize every Ψ node in topological order
+    # plan execution: materialize needed Ψ nodes in topological order,
+    # consulting the cross-batch SharedPathCache first
     # ------------------------------------------------------------------
-    def _run_plan(self, plan: DirectionPlan, index: QueryIndex, forward: bool):
+    @staticmethod
+    def _plan_children(plan: DirectionPlan, node: PlanNode) -> list[int]:
+        """Splice children after dedupe (same root vertex: keep max budget)."""
+        seen_src: dict[int, int] = {}
+        for cid in node.in_edges:
+            c = plan.nodes[cid]
+            if c.src in seen_src and plan.nodes[seen_src[c.src]].budget >= c.budget:
+                continue
+            seen_src[c.src] = cid
+        return list(seen_src.values())
+
+    def _node_stop(self, plan: DirectionPlan, node: PlanNode,
+                   index: QueryIndex, forward: bool) -> int:
+        # dedicated-node optimization: a half used by exactly one query
+        # and spliced by nobody may stop at its own endpoint (Alg 1)
+        if (node.query is not None and len(node.consumers) == 1
+                and not node.out_edges):
+            qi = node.consumers[0][0]
+            s_, t_, _ = index.queries[qi]
+            return t_ if forward else s_
+        return -2
+
+    def _run_plan(self, plan: DirectionPlan, index: QueryIndex, forward: bool,
+                  stats: Optional[dict] = None):
         cache: dict[int, list[PathSet]] = {}
-        refcount = {n.nid: len(n.out_edges) +
-                    (1 if n.query is not None else 0) for n in plan.nodes}
+        children_of = {n.nid: self._plan_children(plan, n) for n in plan.nodes}
+        stops = {n.nid: self._node_stop(plan, n, index, forward)
+                 for n in plan.nodes}
+        keys: dict[int, tuple] = {}
+        if self.cache is not None:
+            keys = {n.nid: n.signature + (stops[n.nid],)
+                    for n in plan.nodes if n.signature is not None}
+        # a node must be present iff it is a query half or spliced by a
+        # materialized (cache-miss) node; children of hits are never touched.
+        # Cache fetches all happen here — before any put — so entries taken
+        # as device copies stay valid for this plan even if evicted later.
+        need: set[int] = set()
+        mat: list[int] = []
+        stack = sorted(set(plan.half_of_query.values()))
+        while stack:
+            nid = stack.pop()
+            if nid in need:
+                continue
+            need.add(nid)
+            got = self.cache.get(keys[nid]) if nid in keys else None
+            if got is not None:
+                cache[nid] = got
+            else:
+                mat.append(nid)
+                stack.extend(children_of[nid])
         for nid in plan.topo:
+            if nid not in need or nid in cache:
+                continue
             node = plan.nodes[nid]
             slack = self._node_slack(index, node.consumers, forward)
-            # dedicated-node optimization: a half used by exactly one query
-            # and spliced by nobody may stop at its own endpoint (Alg 1)
-            stop = -2
-            if (node.query is not None and len(node.consumers) == 1
-                    and not node.out_edges):
-                qi = node.consumers[0][0]
-                s_, t_, _ = index.queries[qi]
-                stop = t_ if forward else s_
-            children = []
-            seen_src: dict[int, int] = {}
-            for cid in node.in_edges:
-                c = plan.nodes[cid]
-                # dedupe children rooted at the same vertex: keep max budget
-                if c.src in seen_src and plan.nodes[seen_src[c.src]].budget >= c.budget:
-                    continue
-                seen_src[c.src] = cid
-            for cid in seen_src.values():
-                c = plan.nodes[cid]
-                children.append((c.src, c.budget, cache[cid]))
+            children = [(plan.nodes[cid].src, plan.nodes[cid].budget, cache[cid])
+                        for cid in children_of[nid]]
             cache[nid] = self._run_node(not forward, node.src, node.budget,
-                                        slack, children, stop_vertex=stop)
+                                        slack, children, stop_vertex=stops[nid])
+            if self.cache is not None and nid in keys:
+                self.cache.put(keys[nid], cache[nid])
+        if stats is not None:
+            stats["n_psi_nodes"] += len(plan.nodes)
+            stats["n_materialized"] += len(mat)
+            if self.cache is not None:
+                stats["n_cache_hits"] += len(need) - len(mat)
+                stats["n_cache_misses"] += len(mat)
         return cache
 
     # ------------------------------------------------------------------

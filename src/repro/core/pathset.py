@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["PathSet", "empty", "singleton", "compact_rows", "concat", "to_host"]
+__all__ = ["PathSet", "HostPathSet", "empty", "singleton", "compact_rows",
+           "concat", "to_host", "offload", "upload"]
 
 
 class PathSet(NamedTuple):
@@ -91,3 +92,36 @@ def to_host(ps: PathSet) -> np.ndarray:
     """Valid rows as a host numpy array (n, L)."""
     n = int(ps.count)
     return np.asarray(ps.verts[:n])
+
+
+class HostPathSet(NamedTuple):
+    """Host-pinned copy of a PathSet (the cross-batch cache's storage form).
+
+    The full padded buffer is kept (not just the valid rows) so a device
+    re-upload restores the exact capacity bucket and stays within the same
+    jit shape cache as the original materialization.
+    """
+
+    verts: np.ndarray   # (cap, L) int32
+    count: int
+    overflow: bool
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.verts.nbytes) + 16  # array + scalar bookkeeping
+
+    @property
+    def cap(self) -> int:
+        return self.verts.shape[0]
+
+
+def offload(ps: PathSet) -> HostPathSet:
+    """Device -> host copy preserving capacity, count and overflow."""
+    return HostPathSet(verts=np.asarray(ps.verts), count=int(ps.count),
+                       overflow=bool(ps.overflow))
+
+
+def upload(hps: HostPathSet) -> PathSet:
+    """Host -> device round-trip inverse of :func:`offload`."""
+    return PathSet(verts=jnp.asarray(hps.verts), count=jnp.int32(hps.count),
+                   overflow=jnp.bool_(hps.overflow))

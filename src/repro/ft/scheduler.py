@@ -33,19 +33,46 @@ class WorkStealingScheduler:
         self.queues: list[list[_Item]] = [[] for _ in range(n_groups)]
         self.done: dict[int, object] = {}
         self.in_flight: dict[int, _Item] = {}
+        self._inflight_group: dict[int, int] = {}   # cluster_id -> group
         self.steals = 0
+        self._next_id = 0
         self._lock = threading.Lock()
 
     # -- planning ------------------------------------------------------
-    def submit(self, clusters: list[list]) -> None:
-        """Greedy longest-processing-time assignment of clusters to groups."""
-        items = [_Item(i, qs, self.cost_fn(qs)) for i, qs in enumerate(clusters)]
-        items.sort(key=lambda it: -it.cost)
-        loads = [0.0] * self.n_groups
-        for it in items:
-            g = loads.index(min(loads))
-            self.queues[g].append(it)
-            loads[g] += it.cost
+    def submit(self, clusters: list[list]) -> list[int]:
+        """Greedy longest-processing-time assignment of clusters to groups.
+
+        Returns the assigned cluster ids (in input order). Ids are globally
+        monotonic so repeated submissions — the streaming admission loop
+        feeds one micro-batch of clusters at a time — never collide.
+        """
+        with self._lock:
+            ids = [self._alloc_id() for _ in clusters]
+            items = [_Item(cid, qs, self.cost_fn(qs))
+                     for cid, qs in zip(ids, clusters)]
+            items.sort(key=lambda it: -it.cost)
+            # account for load already queued or executing (streaming:
+            # earlier micro-batches may still be in flight on a group)
+            loads = [sum(i.cost for i in q) for q in self.queues]
+            for cid, grp in self._inflight_group.items():
+                it = self.in_flight.get(cid)
+                if it is not None:
+                    loads[grp] += it.cost
+            for it in items:
+                g = loads.index(min(loads))
+                self.queues[g].append(it)
+                loads[g] += it.cost
+            return ids
+
+    def submit_one(self, queries: list) -> int:
+        """Streaming admission: enqueue a single cluster onto the least
+        loaded group and return its cluster id."""
+        return self.submit([queries])[0]
+
+    def _alloc_id(self) -> int:
+        cid = self._next_id
+        self._next_id += 1
+        return cid
 
     # -- execution -----------------------------------------------------
     def next_for(self, group: int) -> Optional[_Item]:
@@ -60,11 +87,13 @@ class WorkStealingScheduler:
                 it = self.queues[victim].pop()      # steal from the back
                 self.steals += 1
             self.in_flight[it.cluster_id] = it
+            self._inflight_group[it.cluster_id] = group
             return it
 
     def complete(self, cluster_id: int, result) -> None:
         with self._lock:
             self.in_flight.pop(cluster_id, None)
+            self._inflight_group.pop(cluster_id, None)
             self.done[cluster_id] = result
 
     def fail_group(self, group: int, lost_cluster_ids: list[int]) -> None:
@@ -72,6 +101,7 @@ class WorkStealingScheduler:
         with self._lock:
             for cid in lost_cluster_ids:
                 it = self.in_flight.pop(cid, None)
+                self._inflight_group.pop(cid, None)
                 if it is not None and cid not in self.done:
                     target = min(range(self.n_groups),
                                  key=lambda g: sum(i.cost for i in self.queues[g]))
@@ -102,4 +132,6 @@ class WorkStealingScheduler:
         for cid, qs, cost in state["in_flight"]:
             sched.queues[0].append(_Item(cid, qs, cost))
         sched.done = dict.fromkeys(state["done"])
+        seen = [i.cluster_id for q in sched.queues for i in q] + list(sched.done)
+        sched._next_id = max(seen, default=-1) + 1
         return sched

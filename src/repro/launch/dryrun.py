@@ -23,7 +23,7 @@ from pathlib import Path
 
 import jax
 
-from .mesh import mesh_by_name
+from .mesh import mesh_by_name, use_mesh
 from .steps import build_bundle
 from .hlo_analysis import analyze_hlo
 from ..config import RunOptions
@@ -58,7 +58,7 @@ def dryrun_cell(arch: str, shape: str, mesh_name: str,
                      in_shardings=bundle.in_shardings,
                      out_shardings=bundle.out_shardings,
                      donate_argnums=bundle.donate_argnums)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         lowered = jitted.lower(*bundle.abstract_inputs)
         t_lower = time.perf_counter() - t0
         t0 = time.perf_counter()

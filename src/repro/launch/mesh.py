@@ -4,20 +4,32 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_host_mesh", "mesh_by_name"]
+__all__ = ["make_production_mesh", "make_host_mesh", "mesh_by_name",
+           "use_mesh"]
+
+
+def _axis_types_kw(n_axes: int) -> dict:
+    # jax >= 0.6 wants explicit axis types; older jax has no such kwarg
+    at = getattr(jax.sharding, "AxisType", None)
+    return {"axis_types": (at.Auto,) * n_axes} if at is not None else {}
+
+
+def use_mesh(mesh):
+    """Context manager installing `mesh` as the ambient mesh:
+    ``jax.set_mesh`` on modern jax, the Mesh context manager on older."""
+    return jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_types_kw(len(axes)))
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Tiny mesh over local devices (CPU tests / smoke runs)."""
     return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+                         **_axis_types_kw(2))
 
 
 def mesh_by_name(name: str):

@@ -1,17 +1,24 @@
-"""Batch query serving driver (the paper's deployment shape).
+"""Streaming batch query serving (the paper's deployment shape, made
+continuous).
 
     PYTHONPATH=src python -m repro.launch.serve --n 20000 --queries 64 \
-        --similarity 0.6 --groups 2
+        --similarity 0.6 --groups 2 --rounds 3 --cache-mb 256
 
-Builds a graph, spins the cluster scheduler over `groups` replica groups
-(simulated on this host; each group is a mesh data-slice in production),
-and serves batches with BatchEnum + work stealing. Reports per-batch
-latency, sharing stats, and validates a result sample against the oracle.
+Queries arrive one at a time and are coalesced into micro-batches by a
+deadline/size admission policy. Each micro-batch is clustered with a
+*cache-aware* bias (queries whose half-query results are already warm in
+the cross-batch ``SharedPathCache`` are pulled together), the clusters go
+to replica groups through the work-stealing scheduler, and the engine
+executes them consulting the cache before materializing any Ψ node.
+Per-batch latency, sharing and cache hit/miss stats are logged; a result
+sample is validated against the oracle.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -21,35 +28,194 @@ from ..core.clustering import cluster_queries
 from ..core.similarity import similarity_matrix
 from ..ft.scheduler import WorkStealingScheduler
 
-__all__ = ["serve_batch"]
+__all__ = ["AdmissionPolicy", "StreamingServer", "serve_batch",
+           "warm_cluster_bias"]
+
+Query = tuple[int, int, int]
+
+
+@dataclasses.dataclass
+class AdmissionPolicy:
+    """When to close the open micro-batch and admit it to the engine."""
+
+    max_batch: int = 32         # admit as soon as this many queries wait
+    max_delay_s: float = 0.02   # ... or the oldest has waited this long
+    min_batch: int = 1          # never admit fewer (except on drain)
+
+    def due(self, n_waiting: int, oldest_wait_s: float) -> bool:
+        if n_waiting < self.min_batch:
+            return False
+        return n_waiting >= self.max_batch or oldest_wait_s >= self.max_delay_s
+
+
+def warm_cluster_bias(engine: BatchPathEngine, queries: Sequence[Query],
+                      eps: float = 0.08) -> Optional[np.ndarray]:
+    """(Q, Q) additive clustering bonus from cross-batch cache warmth.
+
+    Two queries get a bonus when they share a half-query root (same source
+    or same target) and the cache holds results enumerated from that root —
+    landing them in the same cluster makes the plan regenerate the cached
+    node's signature so the hit actually fires. A root-warmth probe is a
+    heuristic (the consumer-set part of the key may still differ); a wrong
+    bonus costs nothing but a slightly different clustering.
+    """
+    cache = engine.cache
+    if cache is None or len(queries) < 2:
+        return None
+    warm_f = [cache.has_root("f", s) for s, _, _ in queries]
+    warm_b = [cache.has_root("b", t) for _, t, _ in queries]
+    Q = len(queries)
+    bias = np.zeros((Q, Q), np.float64)
+    src = np.array([q[0] for q in queries])
+    tgt = np.array([q[1] for q in queries])
+    wf = np.array(warm_f)
+    wb = np.array(warm_b)
+    same_src = (src[:, None] == src[None, :]) & wf[:, None] & wf[None, :]
+    same_tgt = (tgt[:, None] == tgt[None, :]) & wb[:, None] & wb[None, :]
+    bias += eps * same_src + eps * same_tgt
+    np.fill_diagonal(bias, 0.0)
+    return bias if bias.any() else None
+
+
+class StreamingServer:
+    """Continuous admission loop over a shared engine + scheduler.
+
+    Usage::
+
+        srv = StreamingServer(engine, n_groups=2)
+        qid = srv.submit((s, t, k))     # returns a stable query id
+        srv.pump()                      # admit due micro-batches (call often)
+        srv.drain()                     # flush everything still waiting
+        srv.results[qid]                # (n_paths, k+1) int32 matrix
+
+    The engine's cross-batch cache (if configured) persists across
+    micro-batches; per-batch cache hit/miss and materialization stats are
+    appended to ``batch_log``.
+    """
+
+    def __init__(self, engine: BatchPathEngine, n_groups: int = 2,
+                 gamma: Optional[float] = None,
+                 policy: Optional[AdmissionPolicy] = None,
+                 warm_bias_eps: float = 0.08):
+        self.engine = engine
+        self.n_groups = n_groups
+        self.gamma = engine.cfg.gamma if gamma is None else gamma
+        self.policy = policy or AdmissionPolicy()
+        self.warm_bias_eps = warm_bias_eps
+        self.sched = WorkStealingScheduler(
+            n_groups, cost_fn=lambda qs: float(len(qs)) ** 1.5)
+        self.results: dict[int, np.ndarray] = {}
+        self.batch_log: list[dict] = []
+        self._waiting: list[tuple[int, Query, float]] = []
+        self._query_of: dict[int, Query] = {}   # qid -> query
+        self._next_qid = 0
+
+    # -- ingress -------------------------------------------------------
+    def submit(self, query: Query, now: Optional[float] = None) -> int:
+        qid = self._next_qid
+        self._next_qid += 1
+        query = tuple(int(x) for x in query)
+        self._query_of[qid] = query
+        self._waiting.append((qid, query,
+                              time.monotonic() if now is None else now))
+        return qid
+
+    def pump(self, now: Optional[float] = None) -> bool:
+        """Admit every micro-batch the policy says is due (a burst can
+        leave several deadline-expired batches queued at once)."""
+        admitted = False
+        now = time.monotonic() if now is None else now
+        while self._waiting:
+            oldest = now - min(arr for _, _, arr in self._waiting)
+            if not self.policy.due(len(self._waiting), oldest):
+                break
+            self._admit()
+            admitted = True
+        return admitted
+
+    def drain(self) -> None:
+        """Flush: admit everything still waiting, policy notwithstanding."""
+        while self._waiting:
+            self._admit()
+
+    def take(self, qid: int) -> np.ndarray:
+        """Pop a finished query's result (KeyError if not finished).
+
+        A continuous server must drain ``results`` this way — entries are
+        kept until taken, so an untaken backlog grows without bound.
+        """
+        out = self.results.pop(qid)   # KeyError first: keep pending intact
+        self._query_of.pop(qid, None)
+        return out
+
+    # -- one micro-batch -----------------------------------------------
+    def _admit(self) -> None:
+        batch = self._waiting[:self.policy.max_batch]
+        self._waiting = self._waiting[self.policy.max_batch:]
+        qids = [qid for qid, _, _ in batch]
+        queries = [q for _, q, _ in batch]
+        t0 = time.perf_counter()
+        steals_before = self.sched.steals
+
+        index = build_index(self.engine.dg, queries)
+        mu = similarity_matrix(index, backend=self.engine.cfg.backend)
+        bias = warm_cluster_bias(self.engine, queries, self.warm_bias_eps)
+        clusters = cluster_queries(mu, self.gamma, bias=bias)
+        # scheduler items carry global qids so a requeued item from any
+        # earlier micro-batch still resolves to the right queries
+        cids = self.sched.submit([[qids[li] for li in cl] for cl in clusters])
+
+        agg = {"n_psi_nodes": 0, "n_materialized": 0,
+               "n_cache_hits": 0, "n_cache_misses": 0}
+        open_cids = set(cids)
+        while open_cids:
+            progressed = False
+            for grp in range(self.n_groups):
+                item = self.sched.next_for(grp)
+                if item is None:
+                    continue
+                progressed = True
+                sub = [self._query_of[qid] for qid in item.queries]
+                # the item IS one cluster — pass it through so the engine
+                # keeps our (cache-aware) grouping instead of re-clustering
+                r = self.engine.process(sub, mode="batch",
+                                        clusters=[list(range(len(sub)))])
+                for i, qid in enumerate(item.queries):
+                    self.results[qid] = r.paths[i]
+                for key in agg:
+                    agg[key] += r.stats.get(key, 0)
+                self.sched.complete(item.cluster_id, True)
+                open_cids.discard(item.cluster_id)
+            if not progressed and not any(
+                    cid in self.sched.in_flight for cid in open_cids):
+                break   # nothing runnable (foreign in-flight work only)
+        wall = time.perf_counter() - t0
+        Q = len(queries)
+        self.batch_log.append({
+            "wall_s": wall, "n_queries": Q, "n_clusters": len(clusters),
+            "steals": self.sched.steals - steals_before,
+            "warm_biased": bias is not None,
+            "mu_mean": float((mu.sum() - Q) / max(Q * (Q - 1), 1)),
+            **agg,
+            **({"cache": self.engine.cache.info()}
+               if self.engine.cache is not None else {}),
+        })
 
 
 def serve_batch(engine: BatchPathEngine, queries, n_groups: int = 2,
                 gamma: float = 0.5):
-    """Cluster -> schedule -> process with stealing. Returns (results, info)."""
-    index = build_index(engine.dg, queries)
-    mu = similarity_matrix(index, backend=engine.cfg.backend)
-    clusters = cluster_queries(mu, gamma)
-    sched = WorkStealingScheduler(n_groups,
-                                  cost_fn=lambda qs: float(len(qs)) ** 1.5)
-    sched.submit(clusters)
-    results = {}
-    t0 = time.perf_counter()
-    while sched.pending():
-        for grp in range(n_groups):
-            item = sched.next_for(grp)
-            if item is None:
-                continue
-            sub = [queries[qi] for qi in item.queries]
-            r = engine.process(sub, mode="batch")
-            for i, qi in enumerate(item.queries):
-                results[qi] = r.paths[i]
-            sched.complete(item.cluster_id, True)
-    wall = time.perf_counter() - t0
-    return results, {"wall_s": wall, "n_clusters": len(clusters),
-                     "steals": sched.steals,
-                     "mu_mean": float((mu.sum() - len(queries))
-                                      / max(len(queries) * (len(queries) - 1), 1))}
+    """One-shot batch serving (compat wrapper over the streaming loop).
+
+    Cluster -> schedule -> process with stealing. Returns (results, info).
+    """
+    srv = StreamingServer(engine, n_groups=n_groups, gamma=gamma,
+                          policy=AdmissionPolicy(max_batch=max(len(queries), 1),
+                                                 max_delay_s=0.0))
+    for q in queries:
+        srv.submit(q)
+    srv.drain()
+    info = dict(srv.batch_log[-1]) if srv.batch_log else {"wall_s": 0.0}
+    return srv.results, info
 
 
 def main() -> None:
@@ -61,28 +227,50 @@ def main() -> None:
     ap.add_argument("--k-min", type=int, default=4)
     ap.add_argument("--k-max", type=int, default=5)
     ap.add_argument("--validate", type=int, default=3)
+    ap.add_argument("--rounds", type=int, default=1,
+                    help="repeat the workload to exercise the warm cache")
+    ap.add_argument("--cache-mb", type=int, default=256,
+                    help="cross-batch cache budget in MiB (0 disables)")
+    ap.add_argument("--max-batch", type=int, default=32)
     args = ap.parse_args()
+    if args.rounds < 1:
+        ap.error("--rounds must be >= 1")
 
     g = generators.community(args.n, n_comm=max(4, args.n // 2500),
                              avg_deg=6.0, seed=0)
-    engine = BatchPathEngine(g, EngineConfig(min_cap=128))
+    engine = BatchPathEngine(g, EngineConfig(
+        min_cap=128, cache_bytes=args.cache_mb << 20))
     queries = generators.similar_queries(g, args.queries, args.similarity,
                                          (args.k_min, args.k_max), seed=1)
-    results, info = serve_batch(engine, queries, n_groups=args.groups)
-    n_paths = sum(r.shape[0] for r in results.values())
-    print(f"served {len(queries)} queries -> {n_paths} paths "
-          f"in {info['wall_s']:.2f}s "
-          f"({info['n_clusters']} clusters, {info['steals']} steals, "
-          f"mu={info['mu_mean']:.3f})")
-    # oracle validation sample
+    srv = StreamingServer(engine, n_groups=args.groups,
+                          policy=AdmissionPolicy(max_batch=args.max_batch,
+                                                 max_delay_s=0.0))
+    qids_by_round = []
+    for _ in range(args.rounds):
+        qids_by_round.append([srv.submit(q) for q in queries])
+        srv.drain()
+    for bi, b in enumerate(srv.batch_log):
+        cache = b.get("cache", {})
+        print(f"batch {bi}: {b['n_queries']} queries, "
+              f"{b['n_clusters']} clusters, {b['wall_s']:.2f}s, "
+              f"psi={b['n_psi_nodes']} materialized={b['n_materialized']} "
+              f"hits={b['n_cache_hits']} "
+              f"(cache: {cache.get('entries', 0)} entries, "
+              f"{cache.get('nbytes', 0) >> 20} MiB)")
+    n_paths = sum(srv.results[qid].shape[0] for qid in qids_by_round[0])
+    print(f"served {args.rounds}x{len(queries)} queries -> "
+          f"{n_paths} paths per round")
+    # oracle validation sample + cross-round consistency
     from ..core.oracle import enumerate_paths_bruteforce, path_set
     rng = np.random.default_rng(0)
     for qi in rng.choice(len(queries), size=min(args.validate, len(queries)),
                          replace=False):
         s, t, k = queries[qi]
-        assert path_set(results[qi]) == \
-            path_set(enumerate_paths_bruteforce(g, s, t, k))
-    print(f"validated {args.validate} queries against the oracle: OK")
+        truth = path_set(enumerate_paths_bruteforce(g, s, t, k))
+        for round_qids in qids_by_round:
+            assert path_set(srv.results[round_qids[qi]]) == truth
+    print(f"validated {args.validate} queries against the oracle "
+          f"(all {args.rounds} rounds): OK")
 
 
 if __name__ == "__main__":

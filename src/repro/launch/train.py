@@ -20,7 +20,7 @@ from ..ft import DriverConfig, FailureInjector, TrainDriver
 from ..models import gnn, recsys, transformer
 from ..models.sharding import Rules
 from ..optim import adamw_init
-from .mesh import mesh_by_name
+from .mesh import mesh_by_name, use_mesh
 from .steps import build_bundle, _gnn_dims
 
 __all__ = ["run_training"]
@@ -117,7 +117,7 @@ def run_training(arch: str, shape_name: str, steps: int, ckpt_dir: str,
                      ckpt_every=ckpt_every),
         lambda p, o, *b: step_fn(p, o, *b),
         init_state, batch_fn, injector=FailureInjector(fail_at))
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         return driver.run()
 
 

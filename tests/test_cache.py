@@ -1,0 +1,246 @@
+"""Cross-batch SharedPathCache: unit behavior (hit/miss/LRU eviction,
+invalidation), engine integration (warm batches skip Ψ materialization,
+results stay oracle-exact across repeated/overlapping batches and graph
+mutation), and the streaming admission loop."""
+import numpy as np
+import pytest
+
+from repro.core import BatchPathEngine, EngineConfig, SharedPathCache
+from repro.core import generators
+from repro.core.cache import dedicated_keys, node_signature
+from repro.core.clustering import cluster_queries
+from repro.core.graph import Graph
+from repro.core.oracle import enumerate_paths_bruteforce, path_set
+from repro.core.pathset import HostPathSet, PathSet, offload, upload
+from repro.launch.serve import (AdmissionPolicy, StreamingServer,
+                                warm_cluster_bias)
+
+import jax.numpy as jnp
+
+
+def _levels(width=4, rows=8, fill=7):
+    verts = jnp.full((rows, width), -1, jnp.int32).at[:, 0].set(fill)
+    return [PathSet(verts, jnp.int32(rows), jnp.bool_(False))]
+
+
+def _assert_oracle(g, qs, res):
+    for qi, (s, t, k) in enumerate(qs):
+        got = [tuple(int(x) for x in row if x >= 0) for row in res.paths[qi]]
+        assert len(got) == len(set(got)), f"q{qi}: duplicate paths"
+        assert set(got) == path_set(enumerate_paths_bruteforce(g, s, t, k)), qi
+
+
+class TestUnit:
+    def test_put_get_roundtrip_and_lru_stats(self):
+        c = SharedPathCache(budget_bytes=1 << 20)
+        key = ("f", 1, 2, ((3, 4),), 3)
+        assert c.get(key) is None and c.stats.misses == 1
+        c.put(key, _levels())
+        assert c.contains(key) and len(c) == 1 and c.nbytes > 0
+        got = c.get(key)
+        assert c.stats.hits == 1
+        assert int(got[0].count) == 8
+        np.testing.assert_array_equal(np.asarray(got[0].verts)[:, 0], 7)
+
+    def test_eviction_is_lru_and_bytes_bounded(self):
+        one = sum(h.nbytes for h in map(offload, _levels()))
+        c = SharedPathCache(budget_bytes=3 * one)
+        keys = [("f", i, 2, ((9, 4),), -2) for i in range(3)]
+        for k in keys:
+            c.put(k, _levels())
+        assert len(c) == 3
+        c.get(keys[0])                      # refresh: keys[1] is now LRU
+        c.put(("f", 99, 2, ((9, 4),), -2), _levels())
+        assert not c.contains(keys[1]) and c.contains(keys[0])
+        assert c.stats.evictions == 1 and c.nbytes <= c.budget_bytes
+
+    def test_oversize_entry_skipped(self):
+        c = SharedPathCache(budget_bytes=8)
+        c.put(("f", 0, 1, ((1, 1),), -2), _levels())
+        assert len(c) == 0 and c.stats.oversize_skips == 1
+
+    def test_invalidate_clears_and_bumps_epoch(self):
+        c = SharedPathCache()
+        c.put(("b", 5, 3, ((0, 3),), 0), _levels())
+        assert c.has_root("b", 5)
+        c.invalidate()
+        assert len(c) == 0 and c.epoch == 1 and not c.has_root("b", 5)
+
+    def test_node_signature_canonical(self):
+        ends = {0: (9, 5), 1: (9, 5)}
+        a = node_signature("f", 3, 2, [(0, 1), (1, 1)], ends)
+        b = node_signature("f", 3, 2, [(1, 1), (0, 1)], ends)
+        assert a == b == ("f", 3, 2, ((9, 4),))
+
+    def test_dedicated_keys_match_engine_generated_keys(self):
+        """The warm-probe helper must produce exactly the keys the engine
+        inserts for a singleton-cluster query."""
+        g = generators.erdos(50, 3.0, seed=1)
+        (q,) = generators.random_queries(g, 1, (3, 3), seed=2)
+        eng = BatchPathEngine(g, EngineConfig(min_cap=64, cache_bytes=1 << 20))
+        eng.process([q], mode="batch")
+        fkey, bkey = dedicated_keys(*q)
+        assert eng.cache.contains(fkey) and eng.cache.contains(bkey)
+
+
+class TestEngineIntegration:
+    def test_warm_repeat_batch_skips_materialization(self):
+        g = generators.community(90, n_comm=3, avg_deg=4.0, seed=5)
+        qs = generators.similar_queries(g, 8, similarity=0.9,
+                                        k_range=(3, 4), seed=6)
+        eng = BatchPathEngine(g, EngineConfig(min_cap=64,
+                                              cache_bytes=64 << 20))
+        r1 = eng.process(qs, mode="batch")
+        r2 = eng.process(qs, mode="batch")
+        assert r1.stats["n_materialized"] > 0
+        assert r2.stats["n_materialized"] == 0
+        assert r2.stats["n_cache_hits"] == r1.stats["n_materialized"]
+        _assert_oracle(g, qs, r1)
+        _assert_oracle(g, qs, r2)
+
+    def test_overlapping_batches_oracle_exact(self):
+        g = generators.community(100, n_comm=3, avg_deg=4.0, seed=7)
+        qs1 = generators.similar_queries(g, 6, similarity=0.8,
+                                         k_range=(3, 4), seed=8)
+        qs2 = qs1[:3] + generators.similar_queries(g, 3, similarity=0.8,
+                                                   k_range=(3, 4), seed=9)
+        eng = BatchPathEngine(g, EngineConfig(min_cap=64,
+                                              cache_bytes=64 << 20))
+        _assert_oracle(g, qs1, eng.process(qs1, mode="batch"))
+        r2 = eng.process(qs2, mode="batch")
+        _assert_oracle(g, qs2, r2)
+        # and a cacheless engine agrees exactly
+        cold = BatchPathEngine(g, EngineConfig(min_cap=64))
+        rc = cold.process(qs2, mode="batch")
+        for qi in range(len(qs2)):
+            assert path_set(r2.paths[qi]) == path_set(rc.paths[qi])
+
+    def test_cacheless_engine_unchanged(self):
+        g = generators.erdos(60, 3.0, seed=3)
+        qs = generators.random_queries(g, 4, (3, 4), seed=4)
+        eng = BatchPathEngine(g, EngineConfig(min_cap=64))
+        assert eng.cache is None
+        res = eng.process(qs, mode="batch")
+        assert res.stats["n_cache_hits"] == 0
+        assert res.stats["n_materialized"] > 0
+        _assert_oracle(g, qs, res)
+
+    def test_graph_mutation_invalidates(self):
+        g = generators.community(80, n_comm=2, avg_deg=4.0, seed=10)
+        qs = generators.similar_queries(g, 5, similarity=0.8,
+                                        k_range=(3, 3), seed=11)
+        eng = BatchPathEngine(g, EngineConfig(min_cap=64,
+                                              cache_bytes=64 << 20))
+        eng.process(qs, mode="batch")
+        assert len(eng.cache) > 0
+        # drop a third of the edges: cached paths may no longer exist
+        rng = np.random.default_rng(0)
+        src = np.repeat(np.arange(g.n), np.diff(g.indptr))
+        keep = rng.random(src.size) > 0.33
+        g2 = Graph.from_edges(g.n, src[keep], g.indices[keep])
+        eng.set_graph(g2)
+        assert len(eng.cache) == 0 and eng.cache.epoch == 1
+        res = eng.process(qs, mode="batch")
+        assert res.stats["n_cache_hits"] == 0  # nothing stale survived
+        _assert_oracle(g2, qs, res)
+
+    def test_tiny_budget_evicts_but_stays_correct(self):
+        g = generators.community(80, n_comm=2, avg_deg=4.0, seed=12)
+        qs = generators.similar_queries(g, 6, similarity=0.8,
+                                        k_range=(3, 4), seed=13)
+        eng = BatchPathEngine(g, EngineConfig(min_cap=64, cache_bytes=4096))
+        _assert_oracle(g, qs, eng.process(qs, mode="batch"))
+        r2 = eng.process(qs, mode="batch")
+        _assert_oracle(g, qs, r2)
+        info = eng.cache.info()
+        assert info["evictions"] + info["oversize_skips"] > 0
+        assert info["nbytes"] <= 4096
+
+
+class TestHostRoundTrip:
+    def test_offload_upload_preserves_everything(self):
+        ps = _levels(width=5, rows=3, fill=2)[0]
+        h = offload(ps)
+        assert isinstance(h, HostPathSet)
+        assert h.count == 3 and not h.overflow and h.cap == 3
+        assert h.nbytes >= h.verts.nbytes
+        back = upload(h)
+        np.testing.assert_array_equal(np.asarray(back.verts),
+                                      np.asarray(ps.verts))
+        assert int(back.count) == 3 and not bool(back.overflow)
+
+
+class TestStreaming:
+    def test_streaming_rounds_and_batch_log(self):
+        g = generators.community(100, n_comm=3, avg_deg=4.0, seed=1)
+        qs = generators.similar_queries(g, 8, similarity=0.7,
+                                        k_range=(3, 4), seed=2)
+        eng = BatchPathEngine(g, EngineConfig(min_cap=64,
+                                              cache_bytes=64 << 20))
+        srv = StreamingServer(eng, n_groups=2,
+                              policy=AdmissionPolicy(max_batch=8,
+                                                     max_delay_s=0.0))
+        ids1 = [srv.submit(q) for q in qs]
+        assert srv.pump()               # batch full -> admitted
+        ids2 = [srv.submit(q) for q in qs]
+        srv.drain()
+        assert len(srv.batch_log) == 2
+        cold, warm = srv.batch_log
+        assert cold["n_materialized"] > 0
+        assert warm["n_materialized"] == 0
+        assert warm["n_cache_hits"] > 0
+        for qid, (s, t, k) in zip(ids1 + ids2, list(qs) * 2):
+            assert path_set(srv.results[qid]) == \
+                path_set(enumerate_paths_bruteforce(g, s, t, k))
+
+    def test_take_drains_results(self):
+        g = generators.erdos(60, 3.0, seed=5)
+        qs = generators.random_queries(g, 3, (3, 3), seed=6)
+        eng = BatchPathEngine(g, EngineConfig(min_cap=64))
+        srv = StreamingServer(eng, n_groups=1)
+        qids = [srv.submit(q) for q in qs]
+        srv.drain()
+        got = srv.take(qids[0])
+        assert got.shape[1] == qs[0][2] + 1
+        assert qids[0] not in srv.results
+        with pytest.raises(KeyError):
+            srv.take(qids[0])
+        with pytest.raises(KeyError):
+            srv.take(12345)            # never submitted
+
+    def test_precomputed_clusters_respected(self):
+        g = generators.community(80, n_comm=2, avg_deg=4.0, seed=6)
+        qs = generators.similar_queries(g, 4, similarity=0.9,
+                                        k_range=(3, 3), seed=7)
+        eng = BatchPathEngine(g, EngineConfig(min_cap=64))
+        res = eng.process(qs, mode="batch", clusters=[[0, 1], [2, 3]])
+        assert res.stats["n_clusters"] == 2
+        assert "mu_mean" not in res.stats     # similarity pass skipped
+        _assert_oracle(g, qs, res)
+        with pytest.raises(ValueError):
+            eng.process(qs, mode="batch", clusters=[[0, 1]])  # not a partition
+
+    def test_admission_policy_deadline(self):
+        pol = AdmissionPolicy(max_batch=32, max_delay_s=0.5, min_batch=1)
+        assert not pol.due(3, 0.1)
+        assert pol.due(3, 0.6)          # deadline hit
+        assert pol.due(32, 0.0)         # size hit
+        assert not AdmissionPolicy(min_batch=2).due(1, 99.0)
+
+    def test_warm_bias_biases_clustering(self):
+        g = generators.community(100, n_comm=3, avg_deg=4.0, seed=3)
+        qs = generators.similar_queries(g, 6, similarity=0.8,
+                                        k_range=(3, 3), seed=4)
+        eng = BatchPathEngine(g, EngineConfig(min_cap=64,
+                                              cache_bytes=64 << 20))
+        assert warm_cluster_bias(eng, qs) is None  # cold cache -> no bias
+        eng.process(qs, mode="batch")
+        bias = warm_cluster_bias(eng, qs)
+        assert bias is not None and bias.max() > 0
+        assert np.allclose(bias, bias.T) and np.all(np.diag(bias) == 0)
+        # the bias can merge clusters a plain threshold would keep apart
+        mu = np.eye(2)
+        assert cluster_queries(mu, gamma=0.05) == [[0], [1]]
+        merged = cluster_queries(mu, gamma=0.05,
+                                 bias=np.array([[0, .1], [.1, 0]]))
+        assert merged == [[0, 1]]

@@ -5,7 +5,13 @@ import subprocess
 import sys
 import textwrap
 
+import jax
 import pytest
+
+pytestmark = pytest.mark.skipif(
+    not hasattr(jax.sharding, "AxisType"),
+    reason="needs the modern jax sharding API (jax.make_mesh axis_types, "
+           "jax.set_mesh, jax.shard_map); installed jax is too old")
 
 
 def _run(code: str) -> str:

@@ -1,0 +1,51 @@
+"""Property-based engine invariants (hypothesis).
+
+hypothesis is an optional [test] extra; without it this whole module
+degrades to a skip instead of a collection error.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import BatchPathEngine, EngineConfig  # noqa: E402
+from repro.core.graph import Graph  # noqa: E402
+from repro.core import generators  # noqa: E402
+
+from test_engine import _run_and_compare  # noqa: E402
+
+
+@given(st.integers(10, 60), st.integers(10, 160), st.integers(0, 30),
+       st.integers(2, 5))
+@settings(max_examples=12, deadline=None)
+def test_property_batch_equals_oracle(n, m, seed, k):
+    """Property: for ANY random digraph and query set, batch mode returns
+    exactly the oracle's simple-path set (no dupes, no misses)."""
+    r = np.random.default_rng(seed)
+    g = Graph.from_edges(n, r.integers(0, n, m), r.integers(0, n, m))
+    pairs = set()
+    while len(pairs) < 4:
+        s, t = int(r.integers(0, n)), int(r.integers(0, n))
+        if s != t:
+            pairs.add((s, t))
+    qs = [(s, t, k) for s, t in pairs]
+    _run_and_compare(g, qs, "batch")
+
+
+@given(st.integers(0, 20))
+@settings(max_examples=8, deadline=None)
+def test_property_results_are_simple_and_bounded(seed):
+    g = generators.powerlaw(80, 3.0, seed=seed)
+    qs = generators.random_queries(g, 4, (3, 5), seed=seed + 50)
+    eng = BatchPathEngine(g, EngineConfig(min_cap=64))
+    res = eng.process(qs, mode="batch")
+    edge_set = {(int(s), int(t)) for s in range(g.n) for t in g.neighbors(s)}
+    for qi, (s, t, k) in enumerate(qs):
+        for row in res.paths[qi]:
+            p = [int(x) for x in row if x >= 0]
+            assert p[0] == s and p[-1] == t
+            assert len(p) - 1 <= k                      # hop constraint
+            assert len(set(p)) == len(p)                # simple
+            for a, b in zip(p, p[1:]):                  # real edges
+                assert (a, b) in edge_set

@@ -1,7 +1,7 @@
 """Graph container + generator invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis or skip-shim
 
 from repro.core.graph import Graph, DeviceGraph
 from repro.core import generators

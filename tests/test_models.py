@@ -14,7 +14,7 @@ import pytest
 
 from repro import configs as cr
 from repro.config import RunOptions
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, use_mesh
 from repro.launch.steps import build_bundle, _gnn_dims
 from repro.models.sharding import Rules
 from repro.models import transformer, gnn, recsys
@@ -83,7 +83,7 @@ def test_arch_smoke(arch, shape, over):
     rules = Rules(mesh)
     b = build_bundle(arch, shape, rules, OPTS, reduced=True, overrides=over)
     args = _concretize(rng, b.abstract_inputs, cr.get(arch), shape, over)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         out = jax.jit(b.step_fn, in_shardings=b.in_shardings,
                       out_shardings=b.out_shardings)(*args)
     # output shapes match the abstract eval, and no NaNs anywhere
@@ -111,7 +111,7 @@ def test_lm_loss_decreases():
     stream = TokenStream(cfg.vocab, 8, 64, seed=1)
     step = jax.jit(b.step_fn)
     losses = []
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         for i in range(8):
             tok, tgt = stream.batch_at(i)
             params, opt, m = step(params, opt, jnp.asarray(tok),

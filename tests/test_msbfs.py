@@ -1,7 +1,7 @@
 """MS-BFS index vs host BFS oracle (+ packed kernel parity)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis or skip-shim
 
 from repro.core.graph import Graph, DeviceGraph
 from repro.core.msbfs import msbfs_dist, INF_FOR

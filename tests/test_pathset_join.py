@@ -3,7 +3,7 @@ concat packing, the ⊕ bucket join vs a brute-force join, and the DP
 capacity planner's upper-bound property."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis or skip-shim
 
 from repro.core.pathset import PathSet, compact_rows, concat, empty, singleton
 from repro.core.join import keyed_join, cross_join, sort_by_last
