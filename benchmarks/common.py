@@ -28,15 +28,16 @@ def default_graph(scale: float = 1.0, seed: int = 0):
                                 seed=seed)
 
 
-def time_mode(engine: BatchPathEngine, queries, mode: str, repeats: int = 1,
-              warmup: bool = True):
+def time_planner(engine: BatchPathEngine, queries, planner, repeats: int = 1,
+                 warmup: bool = True):
+    """Best-of-N wall time for one planner (warm: jit compiles excluded)."""
     if warmup:  # first call pays jit compiles; time the warm path
-        engine.process(queries, mode=mode)
+        engine.run(queries, planner=planner)
     best = None
     stats = None
     for _ in range(max(repeats, 1)):
         t0 = time.perf_counter()
-        res = engine.process(queries, mode=mode)
+        res = engine.run(queries, planner=planner)
         dt = time.perf_counter() - t0
         best = dt if best is None else min(best, dt)
         stats = res.stats

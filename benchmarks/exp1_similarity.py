@@ -8,7 +8,7 @@ from __future__ import annotations
 
 from repro.core import BatchPathEngine, EngineConfig
 from repro.core import generators
-from .common import default_graph, measured_similarity, record, time_mode
+from .common import default_graph, measured_similarity, record, time_planner
 
 
 def main(scale: float = 1.0) -> list[dict]:
@@ -19,10 +19,10 @@ def main(scale: float = 1.0) -> list[dict]:
         qs = generators.similar_queries(g, 24, similarity=sim,
                                         k_range=(5, 5), seed=int(sim * 10))
         mu = measured_similarity(eng, qs)
-        t_basic, _ = time_mode(eng, qs, "basic")
-        t_basicp, _ = time_mode(eng, qs, "basic+")
-        t_batch, sb = time_mode(eng, qs, "batch")
-        t_batchp, _ = time_mode(eng, qs, "batch+")
+        t_basic, _ = time_planner(eng, qs, "basic")
+        t_basicp, _ = time_planner(eng, qs, "basic+")
+        t_batch, sb = time_planner(eng, qs, "batch")
+        t_batchp, _ = time_planner(eng, qs, "batch+")
         speedup = t_basic / t_batch
         limit = 1.0 / max(1.0 - mu, 1e-9)
         rows.append(dict(similarity=sim, mu=mu, t_basic=t_basic,

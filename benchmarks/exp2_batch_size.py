@@ -7,7 +7,7 @@ from __future__ import annotations
 
 from repro.core import BatchPathEngine, EngineConfig
 from repro.core import generators
-from .common import default_graph, record, time_mode
+from .common import default_graph, record, time_planner
 
 
 def main(scale: float = 1.0) -> list[dict]:
@@ -17,8 +17,8 @@ def main(scale: float = 1.0) -> list[dict]:
     for nq in [10, 20, 40, 80]:
         qs = generators.similar_queries(g, nq, similarity=0.6,
                                         k_range=(5, 5), seed=nq)
-        t_basic, _ = time_mode(eng, qs, "basic")
-        t_batch, sb = time_mode(eng, qs, "batch")
+        t_basic, _ = time_planner(eng, qs, "basic")
+        t_batch, sb = time_planner(eng, qs, "batch")
         rows.append(dict(n_queries=nq, t_basic=t_basic, t_batch=t_batch,
                          speedup=t_basic / t_batch))
         record(f"exp2_q{nq}_basic", t_basic * 1e6, "")

@@ -15,7 +15,7 @@ def main(scale: float = 1.0) -> dict:
     eng = BatchPathEngine(g, EngineConfig(min_cap=128))
     qs = generators.similar_queries(g, 32, similarity=0.6, k_range=(5, 5),
                                     seed=3)
-    res = eng.process(qs, mode="batch+")
+    res = eng.run(qs, planner="batch+")
     st = res.stats
     parts = {"BuildIndex": st["t_build_index"],
              "ClusterQuery": st["t_cluster"],

@@ -9,7 +9,7 @@ import dataclasses
 
 from repro.core import BatchPathEngine, EngineConfig
 from repro.core import generators
-from .common import default_graph, record, time_mode
+from .common import default_graph, record, time_planner
 
 
 def main(scale: float = 1.0) -> list[dict]:
@@ -19,7 +19,7 @@ def main(scale: float = 1.0) -> list[dict]:
     rows = []
     for gamma in [0.1, 0.3, 0.5, 0.7, 0.9, 1.0]:
         eng = BatchPathEngine(g, EngineConfig(min_cap=128, gamma=gamma))
-        t, st = time_mode(eng, qs, "batch")
+        t, st = time_planner(eng, qs, "batch")
         rows.append(dict(gamma=gamma, t=t, n_clusters=st["n_clusters"],
                          n_shared=st.get("n_shared", 0)))
         record(f"exp4_gamma{gamma:.1f}", t * 1e6,

@@ -6,7 +6,7 @@ from __future__ import annotations
 
 from repro.core import BatchPathEngine, EngineConfig
 from repro.core import generators
-from .common import default_graph, record, time_mode
+from .common import default_graph, record, time_planner
 
 
 def main(scale: float = 1.0) -> list[dict]:
@@ -16,8 +16,8 @@ def main(scale: float = 1.0) -> list[dict]:
         eng = BatchPathEngine(g, EngineConfig(min_cap=128))
         qs = generators.similar_queries(g, 20, similarity=0.6,
                                         k_range=(5, 5), seed=7)
-        t_basic, _ = time_mode(eng, qs, "basic")
-        t_batch, _ = time_mode(eng, qs, "batch")
+        t_basic, _ = time_planner(eng, qs, "basic")
+        t_batch, _ = time_planner(eng, qs, "batch")
         rows.append(dict(frac=frac, n=g.n, m=g.m, t_basic=t_basic,
                          t_batch=t_batch))
         record(f"exp5_frac{frac:.1f}_basic", t_basic * 1e6, f"n={g.n};m={g.m}")

@@ -14,7 +14,7 @@ import time
 
 from repro.core import BatchPathEngine, EngineConfig
 from repro.core import generators
-from .common import record, time_mode
+from .common import record, time_planner
 
 
 def ksp_adapted(g, s: int, t: int, k: int, limit: int = 10_000_000):
@@ -43,7 +43,7 @@ def main(scale: float = 1.0) -> list[dict]:
     g = generators.community(int(20000 * scale), n_comm=8, avg_deg=6.0, seed=8)
     eng = BatchPathEngine(g, EngineConfig(min_cap=128))
     qs = generators.random_queries(g, 8, (6, 6), seed=9)
-    t_batch, _ = time_mode(eng, qs, "batch")
+    t_batch, _ = time_planner(eng, qs, "batch")
     t0 = time.perf_counter()
     n_paths = 0
     budget = 2_000_000                      # pop budget; reached => lower bound

@@ -27,7 +27,7 @@ from .common import record
 
 def _run(engine, queries):
     t0 = time.perf_counter()
-    res = engine.process(queries, mode="batch")
+    res = engine.run(queries)
     return time.perf_counter() - t0, res
 
 
@@ -73,8 +73,8 @@ def main(scale: float = 1.0) -> dict:
     for qi in sample:
         s, t, k = queries[qi]
         truth = path_set(enumerate_paths_bruteforce(g, s, t, k))
-        assert path_set(r_warm.paths[qi]) == truth, f"warm q{qi} != oracle"
-        assert path_set(r_cold.paths[qi]) == truth, f"cold q{qi} != oracle"
+        assert path_set(r_warm[qi].paths) == truth, f"warm q{qi} != oracle"
+        assert path_set(r_cold[qi].paths) == truth, f"cold q{qi} != oracle"
     assert reduction >= 0.30, (
         f"warm batch must materialize >=30% fewer Ψ nodes, got {reduction:.2f}")
     return {"n": n, "n_queries": len(queries),

@@ -15,7 +15,7 @@ from pathlib import Path
 
 from . import (exp1_similarity, exp2_batch_size, exp3_decomposition,
                exp4_gamma, exp5_scalability, exp6_ksp, exp7_path_counts,
-               exp8_cross_batch, kernels_bench)
+               exp8_cross_batch, exp9_query_variants, kernels_bench)
 from .common import RESULTS
 
 ALL = {
@@ -27,6 +27,7 @@ ALL = {
     "exp6": exp6_ksp.main,
     "exp7": exp7_path_counts.main,
     "exp8": exp8_cross_batch.main,
+    "exp9": exp9_query_variants.main,
     "kernels": kernels_bench.main,
 }
 

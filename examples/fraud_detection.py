@@ -5,21 +5,25 @@ we ask whether paths s ->..-> t of <= k hops exist — each found path closes
 a suspicious cycle when the new edge lands. Transactions in a burst hit
 overlapping hub accounts, so the batch engine's sharing shines.
 
-    PYTHONPATH=src python examples/fraud_detection.py
-"""
-import sys
-sys.path.insert(0, "src")
+Two-stage screening with typed queries: an exists-only pass flags the
+suspicious transactions without assembling a single path row, then a
+limit-capped paths pass pulls a few example cycles as evidence for just
+the flagged ones.
 
+    pip install -e .            # once (or: export PYTHONPATH=src)
+    python examples/fraud_detection.py
+"""
 import numpy as np
 
-from repro.core import BatchPathEngine, EngineConfig
+from repro.core import PathQuery, PathSession, EngineConfig
 from repro.core import generators
 
 K = 5
 N_TX = 24
+N_EVIDENCE = 3                                           # cycles per alert
 
 net = generators.powerlaw(30_000, avg_deg=6.0, seed=7)   # account graph
-engine = BatchPathEngine(net, EngineConfig(gamma=0.5))
+session = PathSession(net, EngineConfig(gamma=0.5))
 
 # synthesize a burst: transactions target a few hub merchants
 rng = np.random.default_rng(0)
@@ -32,14 +36,20 @@ while len(tx) < N_TX:
         # new edge payer->merchant closes a cycle for each merchant->payer path
         tx.append((merchant, payer, K))
 
-res = engine.process(tx, mode="batch")
-flagged = {i: res.paths[i] for i in range(len(tx)) if res.paths[i].shape[0]}
+# stage 1: screen the whole burst with exists-only queries (no path rows)
+screen = session.run([PathQuery(s, t, k, output="exists") for s, t, k in tx])
+flagged = [i for i in range(len(tx)) if screen[i].exists]
 print(f"burst of {len(tx)} transactions, k={K}")
-print(f"flagged {len(flagged)} transactions with cycle-closing paths")
-for i, paths in list(flagged.items())[:5]:
+print(f"flagged {len(flagged)} transactions "
+      f"(screening assembled {screen.stats['n_rows_assembled']} path rows)")
+
+# stage 2: pull a few example cycles as evidence for the flagged ones only
+evidence = session.run([PathQuery(*tx[i], limit=N_EVIDENCE) for i in flagged])
+for j, i in enumerate(flagged[:5]):
     s, t, k = tx[i]
+    paths = evidence[j].paths
     cyc = [int(v) for v in paths[0] if v >= 0]
-    print(f"  tx {t}->{s}: {paths.shape[0]} paths; "
-          f"e.g. cycle {cyc + [cyc[0]]}")
-print("sharing:", res.stats["n_shared"], "shared HC-s path queries across",
-      res.stats["n_clusters"], "clusters")
+    print(f"  tx {t}->{s}: {paths.shape[0]} example cycles; "
+          f"e.g. {cyc + [cyc[0]]}")
+print("sharing:", screen.stats["n_shared"], "shared HC-s path queries across",
+      screen.stats["n_clusters"], "clusters")

@@ -4,18 +4,16 @@ For candidate entity pairs, enumerate bounded-hop paths as relation-path
 features: entities connected by many short paths tend to be related. Many
 pairs share head/tail entities -> natural batch sharing.
 
-    PYTHONPATH=src python examples/kg_completion.py
+    pip install -e .            # once (or: export PYTHONPATH=src)
+    python examples/kg_completion.py
 """
-import sys
-sys.path.insert(0, "src")
-
 import numpy as np
 
-from repro.core import BatchPathEngine, EngineConfig
+from repro.core import PathSession, EngineConfig
 from repro.core import generators
 
 kg = generators.community(15_000, n_comm=12, avg_deg=8.0, seed=3)
-engine = BatchPathEngine(kg, EngineConfig(gamma=0.4))
+session = PathSession(kg, EngineConfig(gamma=0.4))
 
 # candidate pairs around a few entities of interest (same head, many tails)
 rng = np.random.default_rng(1)
@@ -32,18 +30,18 @@ for h in heads:
     cands = list(frontier - {int(h)})[:6]
     pairs += [(int(h), t, 4) for t in cands]
 
-res = engine.process(pairs, mode="batch")
+report = session.run(pairs)      # bare (s, t, k) tuples coerce to PathQuery
 print(f"{len(pairs)} candidate pairs scored")
 scores = []
 for i, (h, t, k) in enumerate(pairs):
-    npaths = res.paths[i].shape[0]
-    lens = [int((row >= 0).sum()) - 1 for row in res.paths[i]]
+    r = report[i]
+    lens = [int((row >= 0).sum()) - 1 for row in r.paths]
     # path-count feature with length discount (PRA-style score)
     score = sum(0.5 ** (l - 1) for l in lens)
-    scores.append((score, h, t, npaths))
+    scores.append((score, h, t, r.count))
 scores.sort(reverse=True)
 print("top predicted links (score, head, tail, n_paths):")
 for s, h, t, n in scores[:8]:
     print(f"  {s:8.2f}  {h:6d} -> {t:6d}   ({n} paths)")
-print("batch stats:", {k: v for k, v in res.stats.items()
+print("batch stats:", {k: v for k, v in report.stats.items()
                        if k.startswith("n_") or k == "mu_mean"})

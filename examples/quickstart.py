@@ -1,41 +1,54 @@
 """Quickstart: batch HC-s-t path query processing in five minutes.
 
-    PYTHONPATH=src python examples/quickstart.py
+    pip install -e .            # once (or: export PYTHONPATH=src)
+    python examples/quickstart.py
 """
-import sys
-sys.path.insert(0, "src")
-
-from repro.core import BatchPathEngine, EngineConfig
+from repro.core import PathQuery, PathSession, EngineConfig
 from repro.core import generators
 
 # 1. a graph (use Graph.from_edges(n, src, dst) for your own edge lists)
 g = generators.community(5000, n_comm=4, avg_deg=6.0, seed=0)
 print(f"graph: {g.n} vertices, {g.m} edges")
 
-# 2. a batch of hop-constrained s-t path queries (s, t, k)
+# 2. a batch of hop-constrained s-t path queries. PathQuery is the typed
+#    form; bare (s, t, k) tuples are coerced automatically.
 queries = generators.similar_queries(g, 16, similarity=0.6, k_range=(4, 5),
                                      seed=1)
 print(f"queries: {len(queries)}, e.g. {queries[0]}")
 
-# 3. the engine: BatchEnum (Alg 4) — clusters queries, detects shared HC-s
-#    path queries, enumerates with computation reuse
-engine = BatchPathEngine(g, EngineConfig(gamma=0.5))
-result = engine.process(queries, mode="batch")
+# 3. the session facade: one entry point for batch runs, streaming
+#    submission, and graph mutation. The default planner is BatchEnum
+#    (Alg 4) — clusters queries, detects shared HC-s path queries,
+#    enumerates with computation reuse.
+session = PathSession(g, EngineConfig(gamma=0.5))
+report = session.run(queries)
 
 for qi in range(3):
-    s, t, k = queries[qi]
-    paths = result.paths[qi]
-    show = [tuple(int(v) for v in p if v >= 0) for p in paths[:3]]
-    print(f"q{qi} ({s}->{t}, k={k}): {paths.shape[0]} paths, first: {show}")
+    r = report[qi]
+    s, t, k = r.query
+    show = [tuple(int(v) for v in p if v >= 0) for p in r.paths[:3]]
+    print(f"q{qi} ({s}->{t}, k={k}): {r.count} paths, first: {show}")
 
 print("stats:", {k: round(v, 4) if isinstance(v, float) else v
-                 for k, v in result.stats.items()})
+                 for k, v in report.stats.items()})
 
-# 4. compare against per-query processing (BasicEnum, Alg 1).
-#    The first call of each mode pays jit compilation; compare warm runs.
-engine.process(queries, mode="basic")
-basic = engine.process(queries, mode="basic")
-warm = engine.process(queries, mode="batch")
+# 4. per-query output kinds: count-only and exists-only queries skip path
+#    materialization entirely (the engine counts with reduction joins)
+s, t, k = queries[0]
+variants = session.run([PathQuery(s, t, k, output="count"),
+                        PathQuery(s, t, k, output="exists"),
+                        PathQuery(s, t, k, limit=2)])
+print(f"count-only: {variants[0].count} paths, exists: {variants[1].exists}, "
+      f"limit=2 returned {variants[2].paths.shape[0]} rows "
+      f"(the whole variant batch assembled "
+      f"{variants.stats['n_rows_assembled']} path rows — "
+      f"only the limit query materialized any)")
+
+# 5. compare against per-query processing (BasicEnum, Alg 1).
+#    The first call of each planner pays jit compilation; compare warm runs.
+session.run(queries, planner="basic")
+basic = session.run(queries, planner="basic")
+warm = session.run(queries)
 t_b = basic.stats["t_enumerate"]
 t_s = warm.stats["t_enumerate"]
 print(f"enumeration (warm): basic {t_b:.3f}s vs batch {t_s:.3f}s "

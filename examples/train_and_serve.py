@@ -1,15 +1,14 @@
 """End-to-end framework driver (deliverable b): fault-tolerant training of a
-reduced LM with checkpoint/restart, then batched query serving with the
-work-stealing scheduler.
+reduced LM with checkpoint/restart, then streaming path-query serving
+through the PathSession facade.
 
-    PYTHONPATH=src python examples/train_and_serve.py
+    pip install -e .            # once (or: export PYTHONPATH=src)
+    python examples/train_and_serve.py
 """
-import sys, tempfile
-sys.path.insert(0, "src")
+import tempfile
 
 from repro.launch.train import run_training
-from repro.launch.serve import serve_batch
-from repro.core import BatchPathEngine, EngineConfig, generators
+from repro.core import PathSession, EngineConfig, generators
 
 # --- 1. train a reduced granite-8b for a few hundred steps, with a crash
 with tempfile.TemporaryDirectory() as ckpt:
@@ -28,13 +27,15 @@ with tempfile.TemporaryDirectory() as ckpt:
     print(f"  resumed at step {h[0]['step']}; "
           f"loss {h[0]['loss']:.3f} -> {h[-1]['loss']:.3f}")
 
-# --- 2. serve a batch of path queries on a graph
+# --- 2. stream a batch of path queries through the session facade
 print("== serving ==")
 g = generators.community(10_000, n_comm=4, avg_deg=6.0, seed=0)
-engine = BatchPathEngine(g, EngineConfig())
+session = PathSession(g, EngineConfig(), n_groups=2)
 queries = generators.similar_queries(g, 32, similarity=0.6, k_range=(4, 5),
                                      seed=1)
-results, info = serve_batch(engine, queries, n_groups=2)
+qids = [session.submit(q) for q in queries]
+results = session.results()          # drains the admission queue
+info = session.batch_log[-1]
 print(f"  {len(queries)} queries -> "
-      f"{sum(r.shape[0] for r in results.values())} paths "
+      f"{sum(results[qid].count for qid in qids)} paths "
       f"in {info['wall_s']:.2f}s; {info['steals']} steals")

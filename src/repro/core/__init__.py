@@ -1,10 +1,15 @@
 """Core: batch HC-s-t simple path query processing (the paper's contribution)."""
 from .graph import Graph, DeviceGraph
 from .cache import SharedPathCache
+from .query import (PathQuery, QueryResult, BatchReport, Planner, Output,
+                    QueryLike)
 from .engine import BatchPathEngine, EngineConfig, EngineOverflow, BatchResult
+from .session import PathSession
 from .index import build_index, QueryIndex
 from . import generators, oracle
 
 __all__ = ["Graph", "DeviceGraph", "BatchPathEngine", "EngineConfig",
            "EngineOverflow", "BatchResult", "SharedPathCache",
+           "PathQuery", "QueryResult", "BatchReport", "Planner", "Output",
+           "QueryLike", "PathSession",
            "build_index", "QueryIndex", "generators", "oracle"]

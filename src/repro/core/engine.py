@@ -5,13 +5,22 @@ detection) emits per-cluster DirectionPlans; this module materializes HC-s
 path queries level by level (expand supersteps + splice joins), caches them
 (the paper's R), and assembles per-query HC-s-t results with the exact-split
 ⊕ join. Every stage is static-shape jit with overflow-retry doubling.
+
+Entry point is :meth:`BatchPathEngine.run`, which takes typed
+:class:`~repro.core.query.PathQuery` objects (legacy ``(s, t, k)`` tuples
+are coerced) and returns a :class:`~repro.core.query.BatchReport` of
+:class:`~repro.core.query.QueryResult` objects. Per-query ``output`` kinds
+are threaded all the way down: count-only and exists-only queries never
+assemble path rows (counting ⊕ joins, mask reductions) and early-terminate,
+as do ``limit``-capped queries. The legacy ``process(queries, mode=...)``
+API survives as a thin deprecation shim.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import defaultdict
-from typing import Optional, Sequence
+import warnings
+from typing import Callable, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -19,9 +28,12 @@ import numpy as np
 from .cache import SharedPathCache
 from .graph import DeviceGraph, Graph
 from .index import QueryIndex, build_index, slack_from_dists, walk_counts
-from .pathset import PathSet, concat, empty, singleton, to_host
-from .enumerate import expand_level, extract_rows, select_ending_at
-from .join import cross_join, keyed_join, sort_by_last
+from .pathset import PathSet, concat, empty, singleton
+from .enumerate import (count_ending_at, expand_level, extract_rows,
+                        select_ending_at)
+from .join import cross_join, keyed_join, keyed_join_count, sort_by_last
+from .query import (BatchReport, Output, PathQuery, PathsStore, Planner,
+                    QueryLike, QueryResult)
 from .similarity import similarity_matrix
 from .clustering import cluster_queries
 from .detect import DirectionPlan, PlanNode, detect_common_queries
@@ -29,6 +41,10 @@ from .detect import DirectionPlan, PlanNode, detect_common_queries
 __all__ = ["EngineConfig", "BatchPathEngine", "EngineOverflow", "BatchResult"]
 
 Query = tuple[int, int, int]
+
+# backward levels are produced lazily: basic planners skip the whole
+# backward enumeration when a forward level already answers exists-only
+Levels = Callable[[], list]
 
 
 class EngineOverflow(RuntimeError):
@@ -53,6 +69,11 @@ class EngineConfig:
 
 @dataclasses.dataclass
 class BatchResult:
+    """Legacy aggregate (eager host matrices); produced only by the
+    deprecated :meth:`BatchPathEngine.process` shim. New code gets a
+    :class:`~repro.core.query.BatchReport` from :meth:`BatchPathEngine.run`.
+    """
+
     paths: dict[int, np.ndarray]    # query idx -> (n_paths, k+1) int32 (pad -1)
     stats: dict
 
@@ -110,75 +131,106 @@ class BatchPathEngine:
     # ------------------------------------------------------------------
     # public API
     # ------------------------------------------------------------------
-    def process(self, queries: Sequence[Query], mode: str = "batch",
-                clusters: Optional[list[list[int]]] = None) -> BatchResult:
-        """mode: 'basic' | 'basic+' | 'batch' | 'batch+' | 'pathenum'.
+    def run(self, queries: Sequence[QueryLike],
+            planner: Planner | str = Planner.BATCH,
+            clusters: Optional[list[list[int]]] = None) -> BatchReport:
+        """Execute a batch of :class:`PathQuery` (tuples are coerced).
 
+        planner : execution strategy (:class:`Planner` or its string value).
         clusters : optional precomputed partition of query indices (batch
-        modes only). The caller — e.g. the streaming server, which clusters
-        with a cache-aware bias — keeps its grouping instead of this method
-        re-running similarity + clustering over the same queries.
+        planners only). The caller — e.g. the streaming server, which
+        clusters with a cache-aware bias — keeps its grouping instead of
+        this method re-running similarity + clustering over the same
+        queries.
         """
-        queries = [(int(s), int(t), int(k)) for s, t, k in queries]
-        for s, t, k in queries:
-            if s == t:
-                raise ValueError("s == t queries are cycles, not s-t paths")
-            if k < 1:
-                raise ValueError("hop constraint must be >= 1")
-        plus = mode.endswith("+") or self.cfg.plus
-        stats: dict = {"mode": mode, "n_queries": len(queries)}
+        qs = tuple(PathQuery.coerce(q).check_bounds(self.g.n)
+                   for q in queries)
+        planner = Planner.coerce(planner)
+        plus = planner.plus or self.cfg.plus
+        stats: dict = {"planner": planner.value, "mode": planner.value,
+                       "n_queries": len(qs), "n_rows_assembled": 0}
+        if not qs:   # degenerate but legal (e.g. a filter left nothing)
+            stats["t_build_index"] = stats["t_enumerate"] = 0.0
+            return BatchReport(queries=qs, results=(), stats=stats)
         t0 = time.perf_counter()
-        if mode == "pathenum":
-            return self._run_pathenum(queries, stats)
-        index = build_index(self.dg, queries, self.cfg.edge_chunk)
+        if planner is Planner.PATHENUM:
+            return self._run_pathenum(qs, stats)
+        index = build_index(self.dg, [q.key for q in qs],
+                            self.cfg.edge_chunk)
         index.dist_s.block_until_ready()
         stats["t_build_index"] = time.perf_counter() - t0
-        if mode.startswith("batch"):
-            return self._run_batch(queries, index, plus, stats, clusters)
-        return self._run_basic(queries, index, plus, stats)
+        if planner.batched:
+            return self._run_batch(qs, index, plus, stats, clusters)
+        return self._run_basic(qs, index, plus, stats)
+
+    def process(self, queries: Sequence[Query], mode: str = "batch",
+                clusters: Optional[list[list[int]]] = None) -> BatchResult:
+        """Deprecated tuple-in / dict-out API; thin shim over :meth:`run`."""
+        warnings.warn(
+            "BatchPathEngine.process(queries, mode=...) is deprecated; use "
+            "run(queries, planner=...) or the PathSession facade",
+            DeprecationWarning, stacklevel=2)
+        report = self.run(queries, planner=mode, clusters=clusters)
+        return BatchResult(paths=report.paths, stats=report.stats)
 
     # ------------------------------------------------------------------
     # BasicEnum (Alg 1): shared index, per-query bidirectional enumeration
     # ------------------------------------------------------------------
-    def _run_basic(self, queries, index: QueryIndex, plus: bool, stats) -> BatchResult:
+    def _run_basic(self, queries, index: QueryIndex, plus: bool,
+                   stats) -> BatchReport:
         t0 = time.perf_counter()
-        results = {}
-        for qi, (s, t, k) in enumerate(queries):
+        results = []
+        for qi, q in enumerate(queries):
+            tq = time.perf_counter()
             a, b = self._split(qi, index, plus)
             fs = self._dedicated_slack(index, qi, forward=True)
-            bs = self._dedicated_slack(index, qi, forward=False)
-            fl = self._run_node(False, s, a, fs, [], stop_vertex=t)
-            bl = self._run_node(True, t, b, bs, [], stop_vertex=s)
-            results[qi] = to_host(self._assemble(fl, a, bl, b, t, k))
-        stats["t_enumerate"] = time.perf_counter() - t0
-        return BatchResult(paths=results, stats=stats)
+            fl = self._run_node(False, q.s, a, fs, [], stop_vertex=q.t)
 
-    def _run_pathenum(self, queries, stats) -> BatchResult:
+            def bwd(qi=qi, q=q, b=b):
+                bs = self._dedicated_slack(index, qi, forward=False)
+                return self._run_node(True, q.t, b, bs, [], stop_vertex=q.s)
+
+            r = self._wrap(q, self._payload(q, fl, a, bwd, b, stats))
+            r.time_s = time.perf_counter() - tq
+            results.append(r)
+        stats["t_enumerate"] = time.perf_counter() - t0
+        return BatchReport(queries=tuple(queries), results=tuple(results),
+                           stats=stats)
+
+    def _run_pathenum(self, queries, stats) -> BatchReport:
         """Per-query index construction + enumeration (the PathEnum baseline)."""
-        results = {}
+        results = []
         t_idx = t_enum = 0.0
-        for qi, (s, t, k) in enumerate(queries):
+        for q in queries:
             t0 = time.perf_counter()
-            index = build_index(self.dg, [(s, t, k)], self.cfg.edge_chunk)
+            index = build_index(self.dg, [q.key], self.cfg.edge_chunk)
             index.dist_s.block_until_ready()
-            t_idx += time.perf_counter() - t0
+            dt_idx = time.perf_counter() - t0
+            t_idx += dt_idx
             t0 = time.perf_counter()
             a, b = self._split(0, index, False)
             fs = self._dedicated_slack(index, 0, forward=True)
-            bs = self._dedicated_slack(index, 0, forward=False)
-            fl = self._run_node(False, s, a, fs, [], stop_vertex=t)
-            bl = self._run_node(True, t, b, bs, [], stop_vertex=s)
-            results[qi] = to_host(self._assemble(fl, a, bl, b, t, k))
-            t_enum += time.perf_counter() - t0
+            fl = self._run_node(False, q.s, a, fs, [], stop_vertex=q.t)
+
+            def bwd(q=q, b=b, index=index):
+                bs = self._dedicated_slack(index, 0, forward=False)
+                return self._run_node(True, q.t, b, bs, [], stop_vertex=q.s)
+
+            r = self._wrap(q, self._payload(q, fl, a, bwd, b, stats))
+            dt_enum = time.perf_counter() - t0
+            t_enum += dt_enum
+            r.time_s = dt_idx + dt_enum
+            results.append(r)
         stats["t_build_index"] = t_idx
         stats["t_enumerate"] = t_enum
-        return BatchResult(paths=results, stats=stats)
+        return BatchReport(queries=tuple(queries), results=tuple(results),
+                           stats=stats)
 
     # ------------------------------------------------------------------
     # BatchEnum (Alg 4): cluster -> detect -> shared enumeration
     # ------------------------------------------------------------------
     def _run_batch(self, queries, index: QueryIndex, plus: bool, stats,
-                   clusters: Optional[list[list[int]]] = None) -> BatchResult:
+                   clusters: Optional[list[list[int]]] = None) -> BatchReport:
         t0 = time.perf_counter()
         if clusters is None:
             mu = similarity_matrix(index, backend=self.cfg.backend)
@@ -232,27 +284,32 @@ class BatchPathEngine:
             t0 = time.perf_counter()
             cache_f = self._run_plan(plan_f, index, forward=True, stats=stats)
             cache_b = self._run_plan(plan_b, index, forward=False, stats=stats)
-            assembled: dict = {}   # identical (halves, k) -> identical results
+            # identical (halves, k, output, limit) -> identical payloads
+            assembled: dict = {}
             for qi in cluster:
-                s, t, k = queries[qi]
+                q = queries[qi]
+                tq = time.perf_counter()
                 a = halves_f[qi][1]
                 b = halves_b[qi][1]
                 fid = plan_f.half_of_query[qi]
                 bid = plan_b.half_of_query[qi]
-                key = (fid, bid, a, b, k, t)
+                key = (fid, bid, a, b, q.k, q.t, q.output, q.limit)
                 if key not in assembled:
                     fl = cache_f[fid]
-                    bl = cache_b[bid]
-                    assembled[key] = to_host(
-                        self._assemble(fl, a, bl, b, t, k))
-                results[qi] = assembled[key]
+                    assembled[key] = self._payload(
+                        q, fl, a, lambda bid=bid: cache_b[bid], b, stats)
+                results[qi] = self._wrap(q, assembled[key])
+                results[qi].time_s = time.perf_counter() - tq
             t_enum += time.perf_counter() - t0
         stats["t_detect"] = t_detect
         stats["t_enumerate"] = t_enum
         stats["n_shared"] = n_shared_total
         stats["n_dedup"] = n_dedup_total
         stats["n_share_edges"] = n_edges_total
-        return BatchResult(paths=results, stats=stats)
+        return BatchReport(queries=tuple(queries),
+                           results=tuple(results[qi]
+                                         for qi in range(len(queries))),
+                           stats=stats)
 
     # ------------------------------------------------------------------
     # plan execution: materialize needed Ψ nodes in topological order,
@@ -395,24 +452,64 @@ class BatchPathEngine:
             return ps
         return PathSet(ps.verts[:tight], ps.count, ps.overflow)
 
-    def _retry_join(self, fn, est: int) -> PathSet:
+    def _retry_capacity(self, fn, est: int):
+        """Run ``fn(cap) -> (result, overflow)`` with cap-doubling retry."""
         cap = _bucket(min(max(est, self.cfg.min_cap), self.cfg.join_cap),
                       self.cfg.min_cap)
         while True:
-            res = fn(cap)
-            if not bool(res.overflow):
+            res, overflow = fn(cap)
+            if not bool(overflow):
                 return res
             if cap >= self.cfg.hard_cap:
                 raise EngineOverflow("join exceeds hard_cap")
             cap = min(cap * 4, self.cfg.hard_cap)
 
+    def _retry_join(self, fn, est: int) -> PathSet:
+        def attempt(cap):
+            ps = fn(cap)
+            return ps, ps.overflow
+        return self._retry_capacity(attempt, est)
+
     # ------------------------------------------------------------------
-    # final ⊕ assembly (exact split, each result exactly once)
+    # final ⊕ assembly (exact split, each result exactly once), dispatched
+    # per query output kind: paths are materialized (lazily host-visible),
+    # counts/existence use counting joins and never assemble a path row
     # ------------------------------------------------------------------
-    def _assemble(self, fwd_levels, a: int, bwd_levels, b: int, t: int, k: int):
+    def _payload(self, q: PathQuery, fwd_levels, a: int, bwd: Levels,
+                 b: int, stats: dict):
+        """The (shareable) answer payload for one query: a PathsStore for
+        output=paths (duplicate queries alias it, so the host transfer
+        happens once), an int for count/exists. ``bwd`` is a thunk —
+        count/exists/limit queries answered by the forward levels alone
+        never enumerate the backward half (basic planners)."""
+        if q.output is Output.PATHS:
+            ps = self._assemble(fwd_levels, a, bwd, b, q.t, q.k,
+                                limit=q.limit)
+            stats["n_rows_assembled"] += int(ps.count)
+            return PathsStore(ps)
+        limit = 1 if q.output is Output.EXISTS else q.limit
+        return self._assemble_count(fwd_levels, a, bwd, b, q.t, q.k,
+                                    limit=limit)
+
+    @staticmethod
+    def _wrap(q: PathQuery, payload) -> QueryResult:
+        if q.output is Output.PATHS:
+            return QueryResult(q, _store=payload)
+        if q.output is Output.EXISTS:
+            return QueryResult(q, _exists=payload > 0)
+        return QueryResult(q, _count=payload, _exists=payload > 0)
+
+    def _assemble(self, fwd_levels, a: int, bwd: Levels, b: int, t: int,
+                  k: int, limit: Optional[int] = None):
+        """``bwd`` is a thunk, only forced when the bidirectional stage is
+        reached — a limit already met by forward completions skips the
+        backward enumeration entirely (basic planners)."""
         width = k + 1
         outs = []
+        found = 0
         for lvl in range(1, min(a, len(fwd_levels) - 1) + 1):
+            if limit is not None and found >= limit:
+                break
             ps = fwd_levels[lvl]
             if int(ps.count) == 0:
                 continue
@@ -420,10 +517,15 @@ class BatchPathEngine:
                                    col=lvl, out_cap=ps.cap)
             if int(sel.count):
                 outs.append(_pad_width(sel, width))
-        if b >= 1 and len(fwd_levels) > a and int(fwd_levels[a].count) > 0:
+                found += int(sel.count)
+        if (not (limit is not None and found >= limit) and b >= 1
+                and len(fwd_levels) > a and int(fwd_levels[a].count) > 0):
+            bwd_levels = bwd()
             fa = fwd_levels[a]
             sa = sort_by_last(fa.verts, fa.count, col=a)
             for lam in range(1, min(b, len(bwd_levels) - 1) + 1):
+                if limit is not None and found >= limit:
+                    break
                 bs = bwd_levels[lam]
                 if int(bs.count) == 0:
                     continue
@@ -433,9 +535,48 @@ class BatchPathEngine:
                     est=max(int(fa.count), int(bs.count)))
                 if int(res.count):
                     outs.append(res)
+                    found += int(res.count)
         if not outs:
             return empty(1, width)
-        return concat(outs)
+        out = concat(outs)
+        if limit is not None:
+            out = PathSet(out.verts, jnp.minimum(out.count, jnp.int32(limit)),
+                          out.overflow)
+        return out
+
+    def _assemble_count(self, fwd_levels, a: int, bwd: Levels, b: int,
+                        t: int, k: int, limit: Optional[int] = None) -> int:
+        """Exact ⊕ count without assembling paths: forward completions are
+        mask reductions, the bidirectional part a counting join. ``limit``
+        early-terminates (1 for exists-only) and clamps the total."""
+        total = 0
+        for lvl in range(1, min(a, len(fwd_levels) - 1) + 1):
+            ps = fwd_levels[lvl]
+            if int(ps.count) == 0:
+                continue
+            total += int(count_ending_at(ps.verts, ps.count, jnp.int32(t),
+                                         col=lvl))
+            if limit is not None and total >= limit:
+                return limit
+        if b >= 1 and len(fwd_levels) > a and int(fwd_levels[a].count) > 0:
+            bwd_levels = bwd()
+            fa = fwd_levels[a]
+            sa = sort_by_last(fa.verts, fa.count, col=a)
+            for lam in range(1, min(b, len(bwd_levels) - 1) + 1):
+                bs = bwd_levels[lam]
+                if int(bs.count) == 0:
+                    continue
+                total += self._retry_count(
+                    lambda cap: keyed_join_count(sa, bs.verts, bs.count,
+                                                 a_col=a, b_col=lam,
+                                                 pair_cap=cap),
+                    est=max(int(fa.count), int(bs.count)))
+                if limit is not None and total >= limit:
+                    return limit
+        return total if limit is None else min(total, limit)
+
+    def _retry_count(self, fn, est: int) -> int:
+        return int(self._retry_capacity(fn, est))
 
     # ------------------------------------------------------------------
     # helpers

@@ -21,7 +21,8 @@ import jax.numpy as jnp
 
 from .pathset import PathSet, compact_rows
 
-__all__ = ["ExpandOut", "expand_level", "extract_rows", "select_ending_at"]
+__all__ = ["ExpandOut", "expand_level", "extract_rows", "select_ending_at",
+           "count_ending_at"]
 
 
 class ExpandOut(NamedTuple):
@@ -78,6 +79,16 @@ def extract_rows(verts: jax.Array, row_mask: jax.Array, *, out_cap: int) -> Path
     """Compact the rows of `verts` where row_mask is True."""
     out, n_out, ovf = compact_rows(row_mask, verts, out_cap)
     return PathSet(out, n_out, ovf)
+
+
+@partial(jax.jit, static_argnames=("col",))
+def count_ending_at(verts: jax.Array, count: jax.Array, vertex,
+                    *, col: int) -> jax.Array:
+    """Number of rows ending (column `col`) at `vertex` — a mask reduction,
+    no compaction and no output buffer (count-/exists-only fast path)."""
+    cap = verts.shape[0]
+    mask = (jnp.arange(cap) < count) & (verts[:, col] == vertex)
+    return mask.sum(dtype=jnp.int32)
 
 
 @partial(jax.jit, static_argnames=("col", "out_cap"))

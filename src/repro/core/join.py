@@ -24,7 +24,8 @@ import jax.numpy as jnp
 
 from .pathset import PathSet, compact_rows
 
-__all__ = ["sort_by_last", "keyed_join", "cross_join", "SortedSide"]
+__all__ = ["sort_by_last", "keyed_join", "keyed_join_count", "cross_join",
+           "SortedSide"]
 
 
 class SortedSide(NamedTuple):
@@ -51,14 +52,12 @@ def _dup_mask(assembled: jax.Array, width: int) -> jax.Array:
     return (eq & iu[None]).any((1, 2))
 
 
-@partial(jax.jit, static_argnames=("a_col", "b_col", "out_cap", "out_width"))
-def keyed_join(a: SortedSide, b_verts: jax.Array, b_count: jax.Array,
-               *, a_col: int, b_col: int, out_cap: int, out_width: int) -> PathSet:
-    """⊕ join: A rows (forward, last col = a_col) with B rows (backward,
-    last col = b_col) sharing the last vertex.
-
-    Output row = A[0..a_col] ++ reversed(B[0..b_col-1])   (B's join vertex
-    and direction folded away), so out length = a_col + b_col hops.
+def _enumerate_pairs(a: SortedSide, b_verts: jax.Array, b_count: jax.Array,
+                     b_col: int, out_cap: int):
+    """Key-bucket pair enumeration shared by the materializing and
+    counting keyed joins: map pair id i -> (A row, B row) over rows
+    sharing the last vertex. Returns (a_pos, b_idx, pair_valid, total)
+    with pair ids beyond out_cap dropped (total still exact).
     """
     b_cap = b_verts.shape[0]
     b_valid = jnp.arange(b_cap) < b_count
@@ -76,6 +75,20 @@ def keyed_join(a: SortedSide, b_verts: jax.Array, b_count: jax.Array,
     prev = jnp.where(b_idx > 0, offs[jnp.maximum(b_idx - 1, 0)], 0)
     a_pos = lo[b_idx] + (i - prev)
     a_pos = jnp.clip(a_pos, 0, a.verts.shape[0] - 1)
+    return a_pos, b_idx, pair_valid, total
+
+
+@partial(jax.jit, static_argnames=("a_col", "b_col", "out_cap", "out_width"))
+def keyed_join(a: SortedSide, b_verts: jax.Array, b_count: jax.Array,
+               *, a_col: int, b_col: int, out_cap: int, out_width: int) -> PathSet:
+    """⊕ join: A rows (forward, last col = a_col) with B rows (backward,
+    last col = b_col) sharing the last vertex.
+
+    Output row = A[0..a_col] ++ reversed(B[0..b_col-1])   (B's join vertex
+    and direction folded away), so out length = a_col + b_col hops.
+    """
+    a_pos, b_idx, pair_valid, total = _enumerate_pairs(
+        a, b_verts, b_count, b_col, out_cap)
 
     a_rows = a.verts[a_pos][:, :a_col + 1]                  # (out_cap, a_col+1)
     b_rows = b_verts[b_idx][:, :b_col]                      # cols 0..b_col-1
@@ -88,6 +101,30 @@ def keyed_join(a: SortedSide, b_verts: jax.Array, b_count: jax.Array,
     ok = pair_valid & ~_dup_mask(assembled, out_width)
     out, n_out, ovf = compact_rows(ok, assembled, out_cap)
     return PathSet(out, n_out, ovf | (total > out_cap))
+
+
+@partial(jax.jit, static_argnames=("a_col", "b_col", "pair_cap"))
+def keyed_join_count(a: SortedSide, b_verts: jax.Array, b_count: jax.Array,
+                     *, a_col: int, b_col: int,
+                     pair_cap: int) -> tuple[jax.Array, jax.Array]:
+    """Count ⊕-join results without assembling an output PathSet.
+
+    Same pair enumeration and simple-path filter as :func:`keyed_join`, but
+    the joined rows exist only transiently for the duplicate-vertex check —
+    no output buffer, no cumsum compaction, nothing to transfer to host but
+    a scalar. Returns ``(n_results, overflow)``; overflow means the raw
+    pair count exceeded ``pair_cap`` and the caller must retry larger.
+    """
+    a_pos, b_idx, pair_valid, total = _enumerate_pairs(
+        a, b_verts, b_count, b_col, pair_cap)
+
+    width = a_col + 1 + b_col
+    a_rows = a.verts[a_pos][:, :a_col + 1]
+    b_rev = b_verts[b_idx][:, :b_col][:, ::-1]
+    assembled = jnp.concatenate([a_rows, b_rev], axis=1)
+    assembled = jnp.where(pair_valid[:, None], assembled, -1)
+    ok = pair_valid & ~_dup_mask(assembled, width)
+    return ok.sum(dtype=jnp.int32), total > pair_cap
 
 
 @partial(jax.jit, static_argnames=("p_col", "c_col", "out_cap", "out_width"))

@@ -1,0 +1,122 @@
+"""PathSession: one facade over batch and streaming execution.
+
+The session owns a :class:`BatchPathEngine` (and, lazily, a
+:class:`~repro.launch.serve.StreamingServer`) so callers deal with exactly
+one object and exactly one result type — :class:`QueryResult` — whether
+they run a one-shot batch or stream queries through micro-batch admission:
+
+    session = PathSession(graph, EngineConfig(cache_bytes=256 << 20))
+
+    # one-shot batch
+    report = session.run([PathQuery(s, t, k), (s2, t2, k2)])
+    report[0].paths            # lazy host matrix
+    report[1].count            # no matrix transfer
+
+    # streaming (micro-batch admission over the same engine + cache)
+    qid = session.submit(PathQuery(s, t, k, output="exists"))
+    for qid, result in session.results().items():
+        ...                    # the same QueryResult type as session.run
+
+    # graph mutation (drops all graph-derived state, incl. the cache)
+    session.update_graph(new_graph)
+
+The streaming machinery is imported lazily so `repro.core` never depends
+on `repro.launch` at import time.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from .cache import SharedPathCache
+from .engine import BatchPathEngine, EngineConfig
+from .graph import Graph
+from .query import BatchReport, PathQuery, Planner, QueryLike, QueryResult
+
+__all__ = ["PathSession"]
+
+
+class PathSession:
+    """Unified entry point for HC-s-t path query processing.
+
+    Parameters
+    ----------
+    graph : the graph to query (or an existing :class:`BatchPathEngine`
+        to wrap — its config/cache are reused).
+    config : engine configuration (ignored when wrapping an engine).
+    planner : default execution strategy for :meth:`run`.
+    n_groups / policy / gamma / warm_bias_eps : streaming-server knobs,
+        applied when the first query is submitted.
+    """
+
+    def __init__(self, graph: Graph | BatchPathEngine,
+                 config: Optional[EngineConfig] = None, *,
+                 planner: Planner | str = Planner.BATCH,
+                 cache: Optional[SharedPathCache] = None,
+                 n_groups: int = 2, policy=None,
+                 gamma: Optional[float] = None,
+                 warm_bias_eps: float = 0.08):
+        if isinstance(graph, BatchPathEngine):
+            self.engine = graph
+        else:
+            self.engine = BatchPathEngine(graph, config, cache=cache)
+        self.planner = Planner.coerce(planner)
+        self._server = None
+        self._server_kw = dict(n_groups=n_groups, policy=policy,
+                               gamma=gamma, warm_bias_eps=warm_bias_eps)
+
+    # -- one-shot batch ------------------------------------------------
+    def run(self, queries: Sequence[QueryLike],
+            planner: Optional[Planner | str] = None,
+            clusters: Optional[list[list[int]]] = None) -> BatchReport:
+        """Execute a batch now; returns a :class:`BatchReport`."""
+        return self.engine.run(queries,
+                               self.planner if planner is None else planner,
+                               clusters)
+
+    # -- streaming -----------------------------------------------------
+    @property
+    def server(self):
+        """The lazily created StreamingServer behind submit/results."""
+        if self._server is None:
+            from ..launch.serve import StreamingServer
+            self._server = StreamingServer(self.engine, **self._server_kw)
+        return self._server
+
+    def submit(self, query: QueryLike, now: Optional[float] = None) -> int:
+        """Enqueue one query (validated now; see StreamingServer.submit)."""
+        return self.server.submit(query, now)
+
+    def pump(self, now: Optional[float] = None) -> bool:
+        """Admit every micro-batch the admission policy says is due."""
+        return self.server.pump(now)
+
+    def results(self, drain: bool = True) -> dict[int, QueryResult]:
+        """Pop every finished query as ``{qid: QueryResult}`` — the same
+        result type :meth:`run` reports. ``drain=True`` (default) first
+        flushes everything still waiting; ``drain=False`` returns only
+        what already finished (a non-blocking poll)."""
+        if self._server is None:
+            return {}
+        if drain:
+            self._server.drain()
+        return {qid: self._server.take(qid)
+                for qid in list(self._server.results)}
+
+    def result(self, qid: int) -> QueryResult:
+        """Pop one finished query's result (KeyError if not finished)."""
+        return self.server.take(qid)
+
+    @property
+    def batch_log(self) -> list[dict]:
+        """Per-micro-batch latency/sharing/cache stats (streaming only)."""
+        return [] if self._server is None else self._server.batch_log
+
+    # -- graph mutation ------------------------------------------------
+    def update_graph(self, graph: Graph) -> None:
+        """Swap the graph: rebuilds device views and invalidates every
+        piece of graph-derived state (host dists, cross-batch cache)."""
+        self.engine.set_graph(graph)
+
+    @property
+    def cache(self) -> Optional[SharedPathCache]:
+        return self.engine.cache

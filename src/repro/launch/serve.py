@@ -24,14 +24,13 @@ import numpy as np
 
 from ..core import BatchPathEngine, EngineConfig, build_index
 from ..core import generators
+from ..core.query import PathQuery, Planner, QueryLike, QueryResult
 from ..core.clustering import cluster_queries
 from ..core.similarity import similarity_matrix
 from ..ft.scheduler import WorkStealingScheduler
 
 __all__ = ["AdmissionPolicy", "StreamingServer", "serve_batch",
            "warm_cluster_bias"]
-
-Query = tuple[int, int, int]
 
 
 @dataclasses.dataclass
@@ -48,7 +47,7 @@ class AdmissionPolicy:
         return n_waiting >= self.max_batch or oldest_wait_s >= self.max_delay_s
 
 
-def warm_cluster_bias(engine: BatchPathEngine, queries: Sequence[Query],
+def warm_cluster_bias(engine: BatchPathEngine, queries: Sequence[QueryLike],
                       eps: float = 0.08) -> Optional[np.ndarray]:
     """(Q, Q) additive clustering bonus from cross-batch cache warmth.
 
@@ -62,12 +61,13 @@ def warm_cluster_bias(engine: BatchPathEngine, queries: Sequence[Query],
     cache = engine.cache
     if cache is None or len(queries) < 2:
         return None
-    warm_f = [cache.has_root("f", s) for s, _, _ in queries]
-    warm_b = [cache.has_root("b", t) for _, t, _ in queries]
+    queries = [PathQuery.coerce(q) for q in queries]
+    warm_f = [cache.has_root("f", q.s) for q in queries]
+    warm_b = [cache.has_root("b", q.t) for q in queries]
     Q = len(queries)
     bias = np.zeros((Q, Q), np.float64)
-    src = np.array([q[0] for q in queries])
-    tgt = np.array([q[1] for q in queries])
+    src = np.array([q.s for q in queries])
+    tgt = np.array([q.t for q in queries])
     wf = np.array(warm_f)
     wb = np.array(warm_b)
     same_src = (src[:, None] == src[None, :]) & wf[:, None] & wf[None, :]
@@ -86,11 +86,14 @@ class StreamingServer:
         qid = srv.submit((s, t, k))     # returns a stable query id
         srv.pump()                      # admit due micro-batches (call often)
         srv.drain()                     # flush everything still waiting
-        srv.results[qid]                # (n_paths, k+1) int32 matrix
+        srv.results[qid]                # QueryResult (same type as batch runs)
 
-    The engine's cross-batch cache (if configured) persists across
-    micro-batches; per-batch cache hit/miss and materialization stats are
-    appended to ``batch_log``.
+    Submissions are validated eagerly (``PathQuery`` coercion + graph
+    bounds), so one malformed query is rejected at submit time instead of
+    failing an entire admitted micro-batch inside the engine. The engine's
+    cross-batch cache (if configured) persists across micro-batches;
+    per-batch cache hit/miss and materialization stats are appended to
+    ``batch_log``.
     """
 
     def __init__(self, engine: BatchPathEngine, n_groups: int = 2,
@@ -104,19 +107,25 @@ class StreamingServer:
         self.warm_bias_eps = warm_bias_eps
         self.sched = WorkStealingScheduler(
             n_groups, cost_fn=lambda qs: float(len(qs)) ** 1.5)
-        self.results: dict[int, np.ndarray] = {}
+        self.results: dict[int, QueryResult] = {}
         self.batch_log: list[dict] = []
-        self._waiting: list[tuple[int, Query, float]] = []
-        self._query_of: dict[int, Query] = {}   # qid -> query
+        self._waiting: list[tuple[int, PathQuery, float]] = []
+        self._query_of: dict[int, PathQuery] = {}   # qid -> query
         self._next_qid = 0
 
     # -- ingress -------------------------------------------------------
-    def submit(self, query: Query, now: Optional[float] = None) -> int:
+    def submit(self, query: QueryLike, now: Optional[float] = None) -> int:
+        """Validate and enqueue one query; returns a stable query id.
+
+        Raises ValueError immediately for malformed queries (bad arity,
+        s == t, k < 1, vertices outside the graph) — admission never sees
+        them, so they cannot poison a micro-batch.
+        """
+        q = PathQuery.coerce(query).check_bounds(self.engine.g.n)
         qid = self._next_qid
         self._next_qid += 1
-        query = tuple(int(x) for x in query)
-        self._query_of[qid] = query
-        self._waiting.append((qid, query,
+        self._query_of[qid] = q
+        self._waiting.append((qid, q,
                               time.monotonic() if now is None else now))
         return qid
 
@@ -138,8 +147,8 @@ class StreamingServer:
         while self._waiting:
             self._admit()
 
-    def take(self, qid: int) -> np.ndarray:
-        """Pop a finished query's result (KeyError if not finished).
+    def take(self, qid: int) -> QueryResult:
+        """Pop a finished query's QueryResult (KeyError if not finished).
 
         A continuous server must drain ``results`` this way — entries are
         kept until taken, so an untaken backlog grows without bound.
@@ -157,7 +166,7 @@ class StreamingServer:
         t0 = time.perf_counter()
         steals_before = self.sched.steals
 
-        index = build_index(self.engine.dg, queries)
+        index = build_index(self.engine.dg, [q.key for q in queries])
         mu = similarity_matrix(index, backend=self.engine.cfg.backend)
         bias = warm_cluster_bias(self.engine, queries, self.warm_bias_eps)
         clusters = cluster_queries(mu, self.gamma, bias=bias)
@@ -178,10 +187,13 @@ class StreamingServer:
                 sub = [self._query_of[qid] for qid in item.queries]
                 # the item IS one cluster — pass it through so the engine
                 # keeps our (cache-aware) grouping instead of re-clustering
-                r = self.engine.process(sub, mode="batch",
-                                        clusters=[list(range(len(sub)))])
+                r = self.engine.run(sub, planner=Planner.BATCH,
+                                    clusters=[list(range(len(sub)))])
                 for i, qid in enumerate(item.queries):
-                    self.results[qid] = r.paths[i]
+                    # results may sit untaken indefinitely — offload so the
+                    # backlog holds compact host rows, not padded device
+                    # buffers (count/exists results hold no buffer at all)
+                    self.results[qid] = r[i].offload()
                 for key in agg:
                     agg[key] += r.stats.get(key, 0)
                 self.sched.complete(item.cluster_id, True)
@@ -206,7 +218,9 @@ def serve_batch(engine: BatchPathEngine, queries, n_groups: int = 2,
                 gamma: float = 0.5):
     """One-shot batch serving (compat wrapper over the streaming loop).
 
-    Cluster -> schedule -> process with stealing. Returns (results, info).
+    Cluster -> schedule -> process with stealing. Returns (results, info)
+    where results maps query index -> QueryResult. New code should prefer
+    ``PathSession`` (``repro.core.session``), which fronts the same loop.
     """
     srv = StreamingServer(engine, n_groups=n_groups, gamma=gamma,
                           policy=AdmissionPolicy(max_batch=max(len(queries), 1),
@@ -257,7 +271,7 @@ def main() -> None:
               f"hits={b['n_cache_hits']} "
               f"(cache: {cache.get('entries', 0)} entries, "
               f"{cache.get('nbytes', 0) >> 20} MiB)")
-    n_paths = sum(srv.results[qid].shape[0] for qid in qids_by_round[0])
+    n_paths = sum(srv.results[qid].count for qid in qids_by_round[0])
     print(f"served {args.rounds}x{len(queries)} queries -> "
           f"{n_paths} paths per round")
     # oracle validation sample + cross-round consistency
@@ -268,7 +282,7 @@ def main() -> None:
         s, t, k = queries[qi]
         truth = path_set(enumerate_paths_bruteforce(g, s, t, k))
         for round_qids in qids_by_round:
-            assert path_set(srv.results[round_qids[qi]]) == truth
+            assert path_set(srv.results[round_qids[qi]].paths) == truth
     print(f"validated {args.validate} queries against the oracle "
           f"(all {args.rounds} rounds): OK")
 

@@ -25,7 +25,7 @@ def _levels(width=4, rows=8, fill=7):
 
 def _assert_oracle(g, qs, res):
     for qi, (s, t, k) in enumerate(qs):
-        got = [tuple(int(x) for x in row if x >= 0) for row in res.paths[qi]]
+        got = [tuple(int(x) for x in row if x >= 0) for row in res[qi].paths]
         assert len(got) == len(set(got)), f"q{qi}: duplicate paths"
         assert set(got) == path_set(enumerate_paths_bruteforce(g, s, t, k)), qi
 
@@ -78,7 +78,7 @@ class TestUnit:
         g = generators.erdos(50, 3.0, seed=1)
         (q,) = generators.random_queries(g, 1, (3, 3), seed=2)
         eng = BatchPathEngine(g, EngineConfig(min_cap=64, cache_bytes=1 << 20))
-        eng.process([q], mode="batch")
+        eng.run([q])
         fkey, bkey = dedicated_keys(*q)
         assert eng.cache.contains(fkey) and eng.cache.contains(bkey)
 
@@ -90,8 +90,8 @@ class TestEngineIntegration:
                                         k_range=(3, 4), seed=6)
         eng = BatchPathEngine(g, EngineConfig(min_cap=64,
                                               cache_bytes=64 << 20))
-        r1 = eng.process(qs, mode="batch")
-        r2 = eng.process(qs, mode="batch")
+        r1 = eng.run(qs)
+        r2 = eng.run(qs)
         assert r1.stats["n_materialized"] > 0
         assert r2.stats["n_materialized"] == 0
         assert r2.stats["n_cache_hits"] == r1.stats["n_materialized"]
@@ -106,21 +106,21 @@ class TestEngineIntegration:
                                                    k_range=(3, 4), seed=9)
         eng = BatchPathEngine(g, EngineConfig(min_cap=64,
                                               cache_bytes=64 << 20))
-        _assert_oracle(g, qs1, eng.process(qs1, mode="batch"))
-        r2 = eng.process(qs2, mode="batch")
+        _assert_oracle(g, qs1, eng.run(qs1))
+        r2 = eng.run(qs2)
         _assert_oracle(g, qs2, r2)
         # and a cacheless engine agrees exactly
         cold = BatchPathEngine(g, EngineConfig(min_cap=64))
-        rc = cold.process(qs2, mode="batch")
+        rc = cold.run(qs2)
         for qi in range(len(qs2)):
-            assert path_set(r2.paths[qi]) == path_set(rc.paths[qi])
+            assert path_set(r2[qi].paths) == path_set(rc[qi].paths)
 
     def test_cacheless_engine_unchanged(self):
         g = generators.erdos(60, 3.0, seed=3)
         qs = generators.random_queries(g, 4, (3, 4), seed=4)
         eng = BatchPathEngine(g, EngineConfig(min_cap=64))
         assert eng.cache is None
-        res = eng.process(qs, mode="batch")
+        res = eng.run(qs)
         assert res.stats["n_cache_hits"] == 0
         assert res.stats["n_materialized"] > 0
         _assert_oracle(g, qs, res)
@@ -131,7 +131,7 @@ class TestEngineIntegration:
                                         k_range=(3, 3), seed=11)
         eng = BatchPathEngine(g, EngineConfig(min_cap=64,
                                               cache_bytes=64 << 20))
-        eng.process(qs, mode="batch")
+        eng.run(qs)
         assert len(eng.cache) > 0
         # drop a third of the edges: cached paths may no longer exist
         rng = np.random.default_rng(0)
@@ -140,7 +140,7 @@ class TestEngineIntegration:
         g2 = Graph.from_edges(g.n, src[keep], g.indices[keep])
         eng.set_graph(g2)
         assert len(eng.cache) == 0 and eng.cache.epoch == 1
-        res = eng.process(qs, mode="batch")
+        res = eng.run(qs)
         assert res.stats["n_cache_hits"] == 0  # nothing stale survived
         _assert_oracle(g2, qs, res)
 
@@ -149,8 +149,8 @@ class TestEngineIntegration:
         qs = generators.similar_queries(g, 6, similarity=0.8,
                                         k_range=(3, 4), seed=13)
         eng = BatchPathEngine(g, EngineConfig(min_cap=64, cache_bytes=4096))
-        _assert_oracle(g, qs, eng.process(qs, mode="batch"))
-        r2 = eng.process(qs, mode="batch")
+        _assert_oracle(g, qs, eng.run(qs))
+        r2 = eng.run(qs)
         _assert_oracle(g, qs, r2)
         info = eng.cache.info()
         assert info["evictions"] + info["oversize_skips"] > 0
@@ -190,7 +190,7 @@ class TestStreaming:
         assert warm["n_materialized"] == 0
         assert warm["n_cache_hits"] > 0
         for qid, (s, t, k) in zip(ids1 + ids2, list(qs) * 2):
-            assert path_set(srv.results[qid]) == \
+            assert path_set(srv.results[qid].paths) == \
                 path_set(enumerate_paths_bruteforce(g, s, t, k))
 
     def test_take_drains_results(self):
@@ -201,7 +201,7 @@ class TestStreaming:
         qids = [srv.submit(q) for q in qs]
         srv.drain()
         got = srv.take(qids[0])
-        assert got.shape[1] == qs[0][2] + 1
+        assert got.paths.shape[1] == qs[0][2] + 1
         assert qids[0] not in srv.results
         with pytest.raises(KeyError):
             srv.take(qids[0])
@@ -213,12 +213,12 @@ class TestStreaming:
         qs = generators.similar_queries(g, 4, similarity=0.9,
                                         k_range=(3, 3), seed=7)
         eng = BatchPathEngine(g, EngineConfig(min_cap=64))
-        res = eng.process(qs, mode="batch", clusters=[[0, 1], [2, 3]])
+        res = eng.run(qs, clusters=[[0, 1], [2, 3]])
         assert res.stats["n_clusters"] == 2
         assert "mu_mean" not in res.stats     # similarity pass skipped
         _assert_oracle(g, qs, res)
         with pytest.raises(ValueError):
-            eng.process(qs, mode="batch", clusters=[[0, 1]])  # not a partition
+            eng.run(qs, clusters=[[0, 1]])  # not a partition
 
     def test_admission_policy_deadline(self):
         pol = AdmissionPolicy(max_batch=32, max_delay_s=0.5, min_batch=1)
@@ -234,7 +234,7 @@ class TestStreaming:
         eng = BatchPathEngine(g, EngineConfig(min_cap=64,
                                               cache_bytes=64 << 20))
         assert warm_cluster_bias(eng, qs) is None  # cold cache -> no bias
-        eng.process(qs, mode="batch")
+        eng.run(qs)
         bias = warm_cluster_bias(eng, qs)
         assert bias is not None and bias.max() > 0
         assert np.allclose(bias, bias.T) and np.all(np.diag(bias) == 0)

@@ -1,7 +1,11 @@
 """Engine correctness: every mode vs the brute-force DFS oracle.
 
-Property-based invariants live in test_engine_properties.py (they need
-hypothesis, an optional [test] dependency, and degrade to skips there).
+Deliberately kept on the legacy ``process(queries, mode=...)`` API: these
+pre-existing tests double as coverage that the deprecation shim stays a
+faithful front for ``run()`` (the warning itself is asserted in
+test_query_api.py). Property-based invariants live in
+test_engine_properties.py (they need hypothesis, an optional [test]
+dependency, and degrade to skips there).
 """
 import numpy as np
 import pytest
@@ -9,6 +13,8 @@ import pytest
 from repro.core import BatchPathEngine, EngineConfig
 from repro.core import generators
 from repro.core.oracle import enumerate_paths_bruteforce, path_set
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
 
 MODES = ["basic", "basic+", "batch", "batch+", "pathenum"]
 

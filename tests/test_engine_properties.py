@@ -15,6 +15,8 @@ from repro.core import generators  # noqa: E402
 
 from test_engine import _run_and_compare  # noqa: E402
 
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
 
 @given(st.integers(10, 60), st.integers(10, 160), st.integers(0, 30),
        st.integers(2, 5))

@@ -1,0 +1,304 @@
+"""Typed query/result API: PathQuery coercion + validation, per-query
+output kinds (count/exists/limit) oracle-exact across planners with the
+⊕-join materialization genuinely skipped, the process() deprecation shim,
+QueryResult laziness, and the PathSession facade over batch + streaming."""
+import numpy as np
+import pytest
+
+from repro.core import (BatchPathEngine, BatchReport, EngineConfig, Output,
+                        PathQuery, PathSession, Planner, QueryResult,
+                        generators)
+from repro.core.oracle import enumerate_paths_bruteforce, path_set
+
+
+@pytest.fixture(scope="module")
+def workload():
+    g = generators.erdos(60, 3.0, seed=1)
+    qs = generators.random_queries(g, 4, (3, 4), seed=2)
+    truth = {q: path_set(enumerate_paths_bruteforce(g, *q)) for q in qs}
+    assert any(truth.values()), "workload needs at least one non-empty query"
+    return g, qs, truth
+
+
+class TestPathQuery:
+    def test_coerce_tuple_list_and_numpy(self):
+        q = PathQuery.coerce((1, 2, 3))
+        assert q == PathQuery(1, 2, 3) and q.key == (1, 2, 3)
+        assert PathQuery.coerce([4, 5, 6]).key == (4, 5, 6)
+        arr = np.array([7, 8, 9])
+        qn = PathQuery.coerce(arr)
+        assert qn.key == (7, 8, 9) and isinstance(qn.s, int)
+        assert PathQuery.coerce(q) is q          # PathQuery passes through
+
+    def test_unpacks_like_legacy_tuple(self):
+        s, t, k = PathQuery(1, 2, 3)
+        assert (s, t, k) == (1, 2, 3)
+        assert tuple(PathQuery(1, 2, 3, output="count")) == (1, 2, 3)
+
+    @pytest.mark.parametrize("bad", [
+        (3, 3, 4),           # s == t
+        (0, 1, 0),           # k < 1
+        (-1, 2, 3),          # negative vertex
+        (1, 2),              # wrong arity
+        "nonsense",
+    ])
+    def test_invalid_queries_rejected(self, bad):
+        with pytest.raises(ValueError):
+            PathQuery.coerce(bad)
+
+    def test_invalid_options_rejected(self):
+        with pytest.raises(ValueError):
+            PathQuery(0, 1, 3, limit=0)
+        with pytest.raises(ValueError):
+            PathQuery(0, 1, 3, output="exists", limit=5)
+        with pytest.raises(ValueError):
+            PathQuery(0, 1, 3, output="bogus")
+
+    def test_planner_and_output_coercion(self):
+        assert Planner.coerce("batch+") is Planner.BATCH_PLUS
+        assert Planner.coerce(Planner.BASIC) is Planner.BASIC
+        assert Planner.BATCH_PLUS.plus and Planner.BATCH_PLUS.batched
+        assert not Planner.PATHENUM.batched
+        with pytest.raises(ValueError):
+            Planner.coerce("turbo")
+        assert Output.coerce("COUNT") is Output.COUNT
+        with pytest.raises(ValueError):
+            Output.coerce("all")
+
+
+class TestOutputKinds:
+    @pytest.mark.parametrize("planner", ["basic", "batch", "pathenum"])
+    def test_count_exists_limit_oracle_exact(self, workload, planner):
+        g, qs, truth = workload
+        eng = BatchPathEngine(g, EngineConfig(min_cap=64))
+        mixed = []
+        for s, t, k in qs:
+            mixed += [PathQuery(s, t, k),
+                      PathQuery(s, t, k, output="count"),
+                      PathQuery(s, t, k, output="exists"),
+                      PathQuery(s, t, k, limit=2),
+                      PathQuery(s, t, k, output="count", limit=2)]
+        rep = eng.run(mixed, planner=planner)
+        assert isinstance(rep, BatchReport) and len(rep) == len(mixed)
+        for i, q in enumerate(qs):
+            full, cnt, exi, lim, climit = rep[5 * i:5 * i + 5]
+            assert path_set(full.paths) == truth[q]
+            assert cnt.count == len(truth[q])
+            assert cnt.exists == bool(truth[q])
+            assert exi.exists == bool(truth[q])
+            got = path_set(lim.paths)
+            assert got <= truth[q]
+            assert len(got) == lim.paths.shape[0] == min(2, len(truth[q]))
+            assert climit.count == min(2, len(truth[q]))
+
+    @pytest.mark.parametrize("planner", ["basic", "batch", "pathenum"])
+    def test_count_exists_skip_materialization(self, workload, planner):
+        g, qs, truth = workload
+        eng = BatchPathEngine(g, EngineConfig(min_cap=64))
+        silent = [PathQuery(s, t, k, output=o)
+                  for s, t, k in qs for o in (Output.COUNT, Output.EXISTS)]
+        rep = eng.run(silent, planner=planner)
+        assert rep.stats["n_rows_assembled"] == 0
+        for i, q in enumerate(qs):
+            assert rep[2 * i].count == len(truth[q])
+            assert rep[2 * i + 1].exists == bool(truth[q])
+
+    def test_paths_rows_assembled_accounted(self, workload):
+        g, qs, truth = workload
+        eng = BatchPathEngine(g, EngineConfig(min_cap=64))
+        rep = eng.run(qs)
+        assert rep.stats["n_rows_assembled"] == \
+            sum(len(truth[q]) for q in qs)
+
+    def test_tuple_batches_still_work(self, workload):
+        g, qs, truth = workload
+        eng = BatchPathEngine(g, EngineConfig(min_cap=64))
+        rep = eng.run(qs)                       # bare tuples
+        for qi, q in enumerate(qs):
+            assert path_set(rep[qi].paths) == truth[q]
+            assert rep[qi].time_s >= 0
+        assert rep.stats["planner"] == "batch"
+
+    def test_out_of_range_vertices_rejected(self, workload):
+        g, qs, _ = workload
+        eng = BatchPathEngine(g, EngineConfig(min_cap=64))
+        with pytest.raises(ValueError):
+            eng.run([(0, g.n + 5, 3)])
+
+    @pytest.mark.parametrize("planner", ["basic", "batch", "pathenum"])
+    def test_empty_batch_is_legal(self, workload, planner):
+        g, _, _ = workload
+        eng = BatchPathEngine(g, EngineConfig(min_cap=64))
+        rep = eng.run([], planner=planner)
+        assert len(rep) == 0 and rep.paths == {}
+        assert rep.stats["n_queries"] == 0
+        assert rep.stats["n_rows_assembled"] == 0
+
+    def test_limit_met_forward_skips_backward_enumeration(self):
+        """exists-only and limit-satisfied queries whose forward levels
+        already answer must not force the backward enumeration (the bwd
+        thunk stays unforced)."""
+        from repro.core.graph import Graph
+        # 0->3 direct, plus 0->1->2->3: the k=3 forward half (a=2) sees
+        # the direct edge at level 1, so forward completions exist
+        g = Graph.from_edges(4, [0, 0, 1, 2], [3, 1, 2, 3])
+        eng = BatchPathEngine(g, EngineConfig(min_cap=64))
+        calls = []
+        orig = eng._run_node
+
+        def spy(reverse, *args, **kwargs):
+            calls.append(reverse)
+            return orig(reverse, *args, **kwargs)
+
+        eng._run_node = spy
+        r = eng.run([PathQuery(0, 3, 3, output="exists")],
+                    planner="basic")[0]
+        assert r.exists and calls == [False]     # backward never enumerated
+        calls.clear()
+        r = eng.run([PathQuery(0, 3, 3, limit=1)], planner="basic")[0]
+        assert r.paths.shape[0] == 1 and calls == [False]
+        calls.clear()
+        # an unlimited paths query does need both halves (0->1->2->3)
+        r = eng.run([PathQuery(0, 3, 3)], planner="basic")[0]
+        assert r.count == 2 and calls == [False, True]
+
+
+class TestLegacyShim:
+    def test_process_warns_and_matches_run(self, workload):
+        g, qs, truth = workload
+        eng = BatchPathEngine(g, EngineConfig(min_cap=64))
+        with pytest.warns(DeprecationWarning):
+            res = eng.process(qs, mode="batch")
+        assert isinstance(res.paths, dict)
+        for qi, q in enumerate(qs):
+            assert isinstance(res.paths[qi], np.ndarray)
+            assert path_set(res.paths[qi]) == truth[q]
+        for key in ("n_queries", "t_enumerate", "n_clusters"):
+            assert key in res.stats
+
+    def test_process_still_validates(self, workload):
+        g, _, _ = workload
+        eng = BatchPathEngine(g, EngineConfig(min_cap=64))
+        with pytest.warns(DeprecationWarning):
+            with pytest.raises(ValueError):
+                eng.process([(3, 3, 4)])
+
+
+class TestQueryResultLazy:
+    def test_paths_materialize_on_demand(self, workload):
+        g, qs, truth = workload
+        q = max(qs, key=lambda q: len(truth[q]))
+        eng = BatchPathEngine(g, EngineConfig(min_cap=64))
+        r = eng.run([q])[0]
+        assert not r._store.materialized
+        assert r.count == len(truth[q])          # count: no host transfer
+        assert not r._store.materialized
+        assert path_set(r.paths) == truth[q]     # now materialized + cached
+        assert r._store.materialized and r.paths is r.paths
+
+    def test_duplicate_queries_share_one_host_transfer(self, workload):
+        g, qs, truth = workload
+        q = max(qs, key=lambda q: len(truth[q]))
+        eng = BatchPathEngine(g, EngineConfig(min_cap=64))
+        rep = eng.run([q, q, q])
+        assert rep[0]._store is rep[1]._store is rep[2]._store
+        first = rep[0].paths
+        assert rep[2]._store.materialized        # aliases, not a re-transfer
+        assert rep[2].paths is first
+
+    def test_offload_releases_device_buffer(self, workload):
+        g, qs, truth = workload
+        eng = BatchPathEngine(g, EngineConfig(min_cap=64))
+        r = eng.run([qs[0]])[0].offload()
+        assert r._store.materialized and r._store._pathset is None
+        assert path_set(r.paths) == truth[qs[0]]
+        # count/exists results have no buffer; offload is a no-op
+        s, t, k = qs[0]
+        rc = eng.run([PathQuery(s, t, k, output="count")])[0].offload()
+        assert rc.count == len(truth[qs[0]])
+
+    def test_count_only_has_no_paths(self, workload):
+        g, qs, truth = workload
+        eng = BatchPathEngine(g, EngineConfig(min_cap=64))
+        s, t, k = qs[0]
+        r = eng.run([PathQuery(s, t, k, output="count")])[0]
+        assert r.count == len(truth[qs[0]])
+        with pytest.raises(ValueError):
+            r.paths
+
+    def test_exists_only_has_no_count(self, workload):
+        g, qs, truth = workload
+        eng = BatchPathEngine(g, EngineConfig(min_cap=64))
+        s, t, k = qs[0]
+        r = eng.run([PathQuery(s, t, k, output="exists")])[0]
+        assert r.exists == bool(truth[qs[0]])
+        with pytest.raises(ValueError):
+            r.count
+        assert "exists" in repr(r)               # repr never materializes
+
+
+class TestPathSession:
+    def test_batch_and_streaming_return_same_result_type(self):
+        g = generators.community(100, n_comm=3, avg_deg=4.0, seed=1)
+        qs = generators.similar_queries(g, 6, similarity=0.7,
+                                        k_range=(3, 4), seed=2)
+        ses = PathSession(g, EngineConfig(min_cap=64), n_groups=2)
+        rep = ses.run(qs)
+        qids = [ses.submit(q) for q in qs]
+        streamed = ses.results()
+        assert set(streamed) == set(qids)
+        for qid, (qi, q) in zip(qids, enumerate(qs)):
+            assert type(streamed[qid]) is type(rep[qi]) is QueryResult
+            truth = path_set(enumerate_paths_bruteforce(g, *q))
+            assert path_set(streamed[qid].paths) == truth
+            assert path_set(rep[qi].paths) == truth
+        assert streamed[qids[0]].query == PathQuery.coerce(qs[0])
+        assert ses.results() == {}               # popped, like take()
+
+    def test_streaming_output_kinds(self):
+        g = generators.community(80, n_comm=2, avg_deg=4.0, seed=3)
+        (q,) = generators.random_queries(g, 1, (3, 3), seed=4)
+        truth = path_set(enumerate_paths_bruteforce(g, *q))
+        ses = PathSession(g, EngineConfig(min_cap=64))
+        s, t, k = q
+        qid_c = ses.submit(PathQuery(s, t, k, output="count"))
+        qid_e = ses.submit(PathQuery(s, t, k, output="exists"))
+        out = ses.results()
+        assert out[qid_c].count == len(truth)
+        assert out[qid_e].exists == bool(truth)
+
+    def test_submit_rejects_malformed_before_admission(self):
+        g = generators.erdos(30, 2.0, seed=5)
+        ses = PathSession(g, EngineConfig(min_cap=64))
+        for bad in [(3, 3, 4), (0, 1, 0), (0, g.n, 3), (1,)]:
+            with pytest.raises(ValueError):
+                ses.submit(bad)
+        assert not ses.server._waiting           # nothing was enqueued
+
+    def test_update_graph_invalidates_cache(self):
+        g = generators.community(80, n_comm=2, avg_deg=4.0, seed=6)
+        qs = generators.similar_queries(g, 4, similarity=0.8,
+                                        k_range=(3, 3), seed=7)
+        ses = PathSession(g, EngineConfig(min_cap=64, cache_bytes=64 << 20))
+        ses.run(qs)
+        assert len(ses.cache) > 0
+        rng = np.random.default_rng(0)
+        src = np.repeat(np.arange(g.n), np.diff(g.indptr))
+        keep = rng.random(src.size) > 0.33
+        from repro.core.graph import Graph
+        g2 = Graph.from_edges(g.n, src[keep], g.indices[keep])
+        ses.update_graph(g2)
+        assert len(ses.cache) == 0
+        rep = ses.run(qs)
+        for qi, q in enumerate(qs):
+            assert path_set(rep[qi].paths) == \
+                path_set(enumerate_paths_bruteforce(g2, *q))
+
+    def test_session_wraps_existing_engine(self):
+        g = generators.erdos(40, 3.0, seed=8)
+        eng = BatchPathEngine(g, EngineConfig(min_cap=64))
+        ses = PathSession(eng, planner="basic")
+        assert ses.engine is eng
+        qs = generators.random_queries(g, 2, (3, 3), seed=9)
+        rep = ses.run(qs)
+        assert rep.stats["planner"] == "basic"

@@ -4,6 +4,8 @@ Scenario: a batch of HC-s-t path queries arrives at a serving cluster; the
 engine clusters them, builds sharing plans, enumerates with reuse, and the
 scheduler distributes clusters across replica groups with work stealing —
 results identical to sequential processing, duplicates-free, oracle-exact.
+Uses the typed run()/BatchReport API throughout (the deprecated process()
+shim is covered by tests/test_engine.py and tests/test_query_api.py).
 """
 import numpy as np
 
@@ -18,15 +20,16 @@ def test_end_to_end_batch_serving():
     queries = generators.similar_queries(g, 12, similarity=0.7,
                                          k_range=(3, 4), seed=2)
     eng = BatchPathEngine(g, EngineConfig(min_cap=64, gamma=0.5))
-    res = eng.process(queries, mode="batch")
+    res = eng.run(queries)
     # results must match both the basic engine and the oracle
-    basic = eng.process(queries, mode="basic")
+    basic = eng.run(queries, planner="basic")
     for qi, (s, t, k) in enumerate(queries):
-        got = path_set(res.paths[qi])
-        assert got == path_set(basic.paths[qi])
+        got = path_set(res[qi].paths)
+        assert got == path_set(basic[qi].paths)
         assert got == path_set(enumerate_paths_bruteforce(g, s, t, k))
     assert res.stats["t_enumerate"] > 0
     assert res.stats["n_clusters"] >= 1
+    assert all(r.time_s >= 0 for r in res)
 
 
 def test_sharing_reduces_expansion_work():
@@ -36,11 +39,11 @@ def test_sharing_reduces_expansion_work():
     base = generators.random_queries(g, 1, (4, 4), seed=4)[0]
     queries = [base] * 6
     eng = BatchPathEngine(g, EngineConfig(min_cap=64))
-    res = eng.process(queries, mode="batch")
+    res = eng.run(queries)
     # identical queries collapse to one half-query per direction
     assert res.stats["n_clusters"] == 1
     for qi in range(6):
-        assert path_set(res.paths[qi]) == path_set(res.paths[0])
+        assert path_set(res[qi].paths) == path_set(res[0].paths)
 
 
 def test_cluster_scheduler_pipeline():
@@ -76,14 +79,14 @@ def test_cluster_scheduler_pipeline():
                 sched.fail_group(0, [item.cluster_id])
                 continue
             sub = [queries[qi] for qi in item.queries]
-            r = eng.process(sub, mode="batch")
-            results.update({item.queries[i]: r.paths[i]
+            r = eng.run(sub)
+            results.update({item.queries[i]: r[i]
                             for i in range(len(sub))})
             sched.complete(item.cluster_id, True)
 
     assert len(results) == len(queries)
     for qi, (s, t, k) in enumerate(queries):
-        assert path_set(results[qi]) == \
+        assert path_set(results[qi].paths) == \
             path_set(enumerate_paths_bruteforce(g, s, t, k))
 
 
@@ -94,5 +97,5 @@ def test_engine_scales_with_reuse_quality():
     queries = generators.similar_queries(g, 8, similarity=1.0,
                                          k_range=(4, 4), seed=8)
     eng = BatchPathEngine(g, EngineConfig(min_cap=64))
-    rb = eng.process(queries, mode="batch")
+    rb = eng.run(queries)
     assert rb.stats["mu_mean"] > 0.3
