@@ -15,7 +15,8 @@ from pathlib import Path
 
 from . import (exp1_similarity, exp2_batch_size, exp3_decomposition,
                exp4_gamma, exp5_scalability, exp6_ksp, exp7_path_counts,
-               exp8_cross_batch, exp9_query_variants, kernels_bench)
+               exp8_cross_batch, exp9_query_variants, exp10_dynamic,
+               kernels_bench)
 from .common import RESULTS
 
 ALL = {
@@ -28,6 +29,7 @@ ALL = {
     "exp7": exp7_path_counts.main,
     "exp8": exp8_cross_batch.main,
     "exp9": exp9_query_variants.main,
+    "exp10": exp10_dynamic.main,
     "kernels": kernels_bench.main,
 }
 

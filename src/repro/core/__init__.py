@@ -1,5 +1,6 @@
 """Core: batch HC-s-t simple path query processing (the paper's contribution)."""
 from .graph import Graph, DeviceGraph
+from .delta import GraphDelta, AppliedDelta
 from .cache import SharedPathCache
 from .query import (PathQuery, QueryResult, BatchReport, Planner, Output,
                     QueryLike)
@@ -8,7 +9,8 @@ from .session import PathSession
 from .index import build_index, QueryIndex
 from . import generators, oracle
 
-__all__ = ["Graph", "DeviceGraph", "BatchPathEngine", "EngineConfig",
+__all__ = ["Graph", "DeviceGraph", "GraphDelta", "AppliedDelta",
+           "BatchPathEngine", "EngineConfig",
            "EngineOverflow", "BatchResult", "SharedPathCache",
            "PathQuery", "QueryResult", "BatchReport", "Planner", "Output",
            "QueryLike", "PathSession",

@@ -27,9 +27,14 @@ Canonical cache key::
 
 Entries are stored host-side (``HostPathSet``) with byte-accurate
 accounting; the cache is a bytes-budgeted LRU. It is only valid for one
-graph: any mutation must call :meth:`SharedPathCache.invalidate`
-(``BatchPathEngine.set_graph`` does this automatically). Not thread-safe;
-each engine/replica group owns its cache.
+graph, tracked per entry by an epoch: a wholesale swap must call
+:meth:`SharedPathCache.invalidate` (``BatchPathEngine.set_graph`` does
+this automatically), while an incremental edge delta goes through
+:meth:`SharedPathCache.invalidate_delta` (via
+``BatchPathEngine.apply_delta``), which evicts only entries whose hop
+radius the changed edges can reach and keeps everything else warm under
+the bumped epoch. Not thread-safe; each engine/replica group owns its
+cache.
 """
 from __future__ import annotations
 
@@ -37,7 +42,10 @@ import dataclasses
 from collections import Counter, OrderedDict
 from typing import Iterable, Optional
 
-from .pathset import HostPathSet, PathSet, offload, upload
+import numpy as np
+
+from .pathset import HostPathSet, PathSet, offload, pathset_nbytes, upload
+from .query import midpoint_split
 
 __all__ = ["SharedPathCache", "CacheStats", "node_signature",
            "dedicated_keys", "DEFAULT_CACHE_BYTES"]
@@ -66,10 +74,11 @@ def dedicated_keys(s: int, t: int, k: int) -> tuple[CacheKey, CacheKey]:
     its own singleton cluster with the default midpoint split. This pins the
     engine's key format (tests assert engine-inserted keys match); admission
     warmth probes use the cheaper :meth:`SharedPathCache.has_root` instead.
-    Hard-codes ``a = (k+1)//2`` — out of sync if cost-based "+" splits are
-    used."""
-    a = (k + 1) // 2
-    b = k - a
+    The split comes from :func:`~repro.core.query.midpoint_split` — the
+    same helper the engine's cluster splitter uses — so these keys cannot
+    drift from what the engine inserts. Only the cost-based "+" planners
+    (which pick a per-query split) may deviate."""
+    a, b = midpoint_split(k)
     fkey = ("f", int(s), a, ((int(t), int(k)),), int(t))
     bkey = ("b", int(t), b, ((int(s), int(k)),), int(s))
     return fkey, bkey
@@ -83,6 +92,9 @@ class CacheStats:
     evictions: int = 0
     invalidations: int = 0
     oversize_skips: int = 0
+    delta_invalidations: int = 0   # invalidate_delta calls
+    delta_evictions: int = 0       # entries a delta proved stale
+    delta_kept: int = 0            # entries that stayed warm across deltas
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -92,6 +104,7 @@ class CacheStats:
 class _Entry:
     levels: list[HostPathSet]
     nbytes: int
+    epoch: int = 0                 # graph epoch this entry is valid for
 
 
 class SharedPathCache:
@@ -129,11 +142,22 @@ class SharedPathCache:
         """Device copies of the cached per-level PathSets, or None on miss.
 
         Each call re-uploads from the host copy (device memory for cached
-        nodes is owned by the batch, not the cache).
+        nodes is owned by the batch, not the cache). The per-entry epoch
+        guard enforces the invalidation contract: every resident entry
+        must carry the current graph epoch (invalidate_delta re-stamps
+        survivors), so an entry that somehow missed an invalidation pass
+        is served as a miss and dropped rather than as stale data.
         """
         entry = self._entries.get(key)
         if entry is None:
             self.stats.misses += 1
+            return None
+        if entry.epoch != self.epoch:
+            self._entries.pop(key)
+            self._nbytes -= entry.nbytes
+            self._drop_root(key)
+            self.stats.misses += 1
+            self.stats.evictions += 1   # anomaly must show up in telemetry
             return None
         self._entries.move_to_end(key)
         self.stats.hits += 1
@@ -143,8 +167,10 @@ class SharedPathCache:
     def put(self, key: CacheKey, levels: list[PathSet]) -> None:
         """Insert (or refresh) a materialized node; evicts LRU to fit."""
         # size is known from the device shapes — reject oversize entries
-        # before paying the device->host transfer (they recur every batch)
-        nbytes = sum(4 * ps.verts.shape[0] * ps.verts.shape[1] + 16
+        # before paying the device->host transfer (they recur every batch).
+        # Same byte-math as HostPathSet.nbytes (pathset_nbytes), so this
+        # pre-transfer check can never diverge from the LRU accounting.
+        nbytes = sum(pathset_nbytes(ps.cap, ps.width, ps.verts.dtype.itemsize)
                      for ps in levels)
         if nbytes > self.budget_bytes:
             self.stats.oversize_skips += 1
@@ -160,7 +186,8 @@ class SharedPathCache:
             self._nbytes -= evicted.nbytes
             self._drop_root(ekey)
             self.stats.evictions += 1
-        self._entries[key] = _Entry(levels=host, nbytes=nbytes)
+        self._entries[key] = _Entry(levels=host, nbytes=nbytes,
+                                    epoch=self.epoch)
         self._roots[key[:2]] += 1
         self._nbytes += nbytes
         self.stats.inserts += 1
@@ -179,6 +206,81 @@ class SharedPathCache:
         self._nbytes = 0
         self.epoch += 1
         self.stats.invalidations += 1
+
+    def max_radius(self) -> int:
+        """Largest hop radius any live entry's validity depends on: its
+        enumeration budget or a consumer's remaining-hop prune radius —
+        the ``k_max`` the invalidation MS-BFS from the touched frontier
+        must cover."""
+        r = 0
+        for key in self._entries:
+            _, _, budget, sig = key[0], key[1], key[2], key[3]
+            r = max(r, int(budget), max((int(rr) for _, rr in sig), default=0))
+        return r
+
+    def invalidate_delta(self, touched, dists: dict) -> dict:
+        """Hop-scoped eviction after an incremental graph delta.
+
+        touched : the delta's touched vertices (endpoints of every changed
+            edge); only used for reporting/no-op detection — the hop
+            geometry arrives pre-computed in ``dists``.
+        dists : two ``(n+1,)`` arrays of min hop distances **to/from the
+            touched frontier** (both endpoints of every changed edge are
+            seeds, so these agree on the old, new, and union graphs — one
+            BFS pair certifies cached state and its fresh recomputation
+            alike; see ``delta.host_set_dist``):
+
+            * ``dists["to"][v]``   -- min hops v -> any touched vertex
+                                      along forward edges,
+            * ``dists["from"][v]`` -- min hops any touched vertex -> v.
+
+        An entry ``(direction, source, budget, sig, stop)`` is evicted iff
+        the damage intersects either radius that defines its result set:
+
+        * its **enumeration ball** — some touched vertex within ``budget``
+          hops of ``source`` in the entry's search direction (a cached
+          path could traverse, or a fresh enumeration could newly reach,
+          a changed edge); or
+        * a **consumer prune radius** — some touched vertex within
+          ``r = k_c - off_c`` hops of a consumer endpoint in the *prune*
+          direction (the slack prune reads ``dist(v, endpoint)``; a
+          changed edge inside that radius can loosen the prune and admit
+          paths the cached levels never enumerated).
+
+        Everything else provably equals a fresh materialization on the new
+        graph and stays warm, re-stamped with the bumped epoch.
+        """
+        d_to = np.asarray(dists["to"])
+        d_from = np.asarray(dists["from"])
+        self.epoch += 1
+        self.stats.delta_invalidations += 1
+        if len(touched) == 0:
+            for entry in self._entries.values():
+                entry.epoch = self.epoch
+            self.stats.delta_kept += len(self._entries)
+            return {"evicted": 0, "kept": len(self._entries),
+                    "epoch": self.epoch}
+        stale = []
+        for key in self._entries:
+            direction, src, budget, sig = key[0], key[1], key[2], key[3]
+            if direction == "f":
+                hit = d_to[src] <= budget or any(d_from[e] <= r
+                                                 for e, r in sig)
+            else:
+                hit = d_from[src] <= budget or any(d_to[e] <= r
+                                                   for e, r in sig)
+            if hit:
+                stale.append(key)
+        for key in stale:
+            entry = self._entries.pop(key)
+            self._nbytes -= entry.nbytes
+            self._drop_root(key)
+        for entry in self._entries.values():
+            entry.epoch = self.epoch
+        self.stats.delta_evictions += len(stale)
+        self.stats.delta_kept += len(self._entries)
+        return {"evicted": len(stale), "kept": len(self._entries),
+                "epoch": self.epoch}
 
     # -- reporting -----------------------------------------------------
     def info(self) -> dict:

@@ -26,14 +26,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from .cache import SharedPathCache
+from .delta import (AppliedDelta, GraphDelta, apply_delta as _merge_delta,
+                    host_set_dist, pow2_ceil as _pow2, update_device_graph)
 from .graph import DeviceGraph, Graph
 from .index import QueryIndex, build_index, slack_from_dists, walk_counts
+from .msbfs import msbfs_set_dist
 from .pathset import PathSet, concat, empty, singleton
 from .enumerate import (count_ending_at, expand_level, extract_rows,
                         select_ending_at)
 from .join import cross_join, keyed_join, keyed_join_count, sort_by_last
 from .query import (BatchReport, Output, PathQuery, PathsStore, Planner,
-                    QueryLike, QueryResult)
+                    QueryLike, QueryResult, midpoint_split)
 from .similarity import similarity_matrix
 from .clustering import cluster_queries
 from .detect import DirectionPlan, PlanNode, detect_common_queries
@@ -65,6 +68,11 @@ class EngineConfig:
     plan_caps: bool = True          # DP-based capacity planning
     paper_faithful_shares: bool = False  # min_shared_budget -> 0
     cache_bytes: int = 0            # >0: cross-batch SharedPathCache budget
+    delta_max_sources: int = 1024   # touched-frontier cap for hop-scoped
+    # invalidation; bigger deltas fall back to a full cache invalidate
+    delta_backend: str = "host"     # "host": vectorized CSR BFS over the
+    # touched balls (cost ~ ball edges); "msbfs": device set-seeded MS-BFS
+    # (for accelerator-resident graphs where m is device-scale)
 
 
 @dataclasses.dataclass
@@ -78,8 +86,16 @@ class BatchResult:
     stats: dict
 
 
-def _pow2(x: int) -> int:
-    return 1 << max(int(x) - 1, 0).bit_length() if x > 1 else 1
+def _sync_device_graph(dg: DeviceGraph) -> None:
+    """Block until every device view is resident. apply_delta calls this
+    before stopping its timer so the reported ``t_apply_s`` charges the
+    async uploads/scatters to the mutation, not to the next batch;
+    set_graph deliberately does NOT sync (no report to keep honest —
+    benchmarks comparing against it must block explicitly)."""
+    import jax
+
+    jax.block_until_ready((dg.esrc, dg.edst, dg.ell_idx, dg.ell_mask,
+                           dg.r_esrc, dg.r_edst, dg.r_ell_idx, dg.r_ell_mask))
 
 
 def _bucket(x: int, min_cap: int = 256) -> int:
@@ -102,13 +118,115 @@ class BatchPathEngine:
         self.cache = cache
 
     def set_graph(self, graph: Graph) -> None:
-        """Swap the graph after a mutation: rebuild device views and drop
-        every piece of graph-derived state (host dists, cross-batch cache)."""
+        """Swap the graph wholesale: rebuild device views and drop every
+        piece of graph-derived state (host dists, cross-batch cache). For
+        incremental edge churn prefer :meth:`apply_delta`, which keeps the
+        warm state whose hop-locality a small delta cannot reach."""
         self.g = graph
         self.dg = DeviceGraph.build(graph)
         self._host_dists = None
         if self.cache is not None:
             self.cache.invalidate()
+
+    def apply_delta(self, delta: GraphDelta) -> dict:
+        """Apply an incremental edge delta; returns an application report.
+
+        The successor graph comes from a CSR merge (``Graph.apply_delta``
+        semantics: ``new = (old − remove) ∪ add``), device views are
+        patched rather than rebuilt (only touched ELL rows change), and
+        the cross-batch cache is invalidated *hop-scoped*: a set-seeded
+        BFS from the delta's touched vertices prices each
+        entry's distance to the damage, and only entries whose enumeration
+        ball or consumer prune radius the damage can reach are evicted
+        (``SharedPathCache.invalidate_delta``). A no-op delta (every edge
+        already present/absent) leaves all state — including the host
+        distance memo — untouched; an effective delta drops only that
+        memo, which the next batch's index rebuilds anyway.
+        """
+        t0 = time.perf_counter()
+        applied = _merge_delta(self.g, delta)
+        report = {
+            "n_added": int(applied.added_src.size),
+            "n_removed": int(applied.removed_src.size),
+            "n_touched": int(applied.touched.size),
+            "cache_mode": "none", "device_update": "none",
+        }
+        if applied.n_changed == 0:
+            report["t_apply_s"] = time.perf_counter() - t0
+            return report
+        if self.cache is not None:
+            report.update(self._invalidate_for(applied))
+        self.dg, incremental = update_device_graph(self.dg, applied)
+        report["device_update"] = "incremental" if incremental else "rebuild"
+        self.g = applied.graph
+        self._host_dists = None
+        _sync_device_graph(self.dg)   # timer measures completed work
+        report["t_apply_s"] = time.perf_counter() - t0
+        return report
+
+    def _invalidate_for(self, applied: AppliedDelta) -> dict:
+        """Cache invalidation for one merged delta (cache must exist)."""
+        cache = self.cache
+        if len(cache) == 0:
+            info = cache.invalidate_delta(applied.touched,
+                                          {"to": np.empty(0, np.int8),
+                                           "from": np.empty(0, np.int8)})
+            return {"cache_mode": "delta", "cache_evicted": 0,
+                    "cache_kept": 0, "cache_epoch": info["epoch"]}
+        if applied.touched.size > self.cfg.delta_max_sources:
+            dropped = len(cache)
+            cache.invalidate()   # frontier too wide: hop-scoping won't pay
+            return {"cache_mode": "full", "cache_evicted": dropped,
+                    "cache_kept": 0, "cache_epoch": cache.epoch}
+        info = cache.invalidate_delta(applied.touched,
+                                      self._delta_dists(applied))
+        return {"cache_mode": "delta", "cache_evicted": info["evicted"],
+                "cache_kept": info["kept"], "cache_epoch": info["epoch"]}
+
+    def _delta_dists(self, applied: AppliedDelta) -> dict:
+        """Min hop distances to/from the touched frontier.
+
+        Both endpoints of every changed edge are seeds, so these distances
+        agree on the old, new, and union graphs (see ``host_set_dist``) —
+        the sweep runs on the *old* graph, which for the "msbfs" backend
+        means the still-resident old device edge lists (``self.dg`` is
+        patched only after invalidation), no transfer or merge needed.
+        Backend "host" (default) walks only the touched balls' edges over
+        the CSR; "msbfs" is for accelerator-resident graphs.
+        """
+        k_max = max(self.cache.max_radius(), 1)
+        if self.cfg.delta_backend == "host":
+            return {"from": host_set_dist(self.g, applied, k_max,
+                                          reverse=False),
+                    "to": host_set_dist(self.g, applied, k_max,
+                                        reverse=True)}
+        # distances beyond every live radius are never compared, so the
+        # pow2-bucketed (larger) k_max is just slack — stable jit shapes
+        # across deltas; msbfs distances are int8, so clamp the bucket at
+        # its documented k_max <= 120 ceiling
+        k_max = min(_pow2(k_max), 120)
+        seed = np.zeros(self.g.n + 1, np.int8)
+        seed[applied.touched] = 1
+        seed = jnp.asarray(seed)
+
+        def pad(a):
+            # pow2-bucket the edge length by repeating the last edge
+            # (duplicates change no distance, the list stays dst-sorted):
+            # without this, any delta with n_add != n_del shifts m and
+            # retraces the sweep on every subsequent delta
+            cap = _pow2(a.shape[0])
+            if cap == a.shape[0] or a.shape[0] == 0:
+                return a
+            return jnp.concatenate(
+                [a, jnp.full(cap - a.shape[0], a[-1], a.dtype)])
+
+        dists = {}
+        for name, (esrc, edst) in (("from", (self.dg.esrc, self.dg.edst)),
+                                   ("to", (self.dg.r_esrc, self.dg.r_edst))):
+            d = msbfs_set_dist(pad(esrc), pad(edst), seed, n=self.g.n,
+                               k_max=k_max, edge_chunk=self.cfg.edge_chunk)
+            dists[name] = np.asarray(d)
+        return dists
 
     def _dists_host(self, index: QueryIndex):
         # memoized per index OBJECT: keep a strong reference so a freed
@@ -583,9 +701,9 @@ class BatchPathEngine:
     # ------------------------------------------------------------------
     def _split(self, qi: int, index: QueryIndex, plus: bool) -> tuple[int, int]:
         s, t, k = index.queries[qi]
-        a = (k + 1) // 2
+        a, b = midpoint_split(k)   # shared with cache.dedicated_keys
         if not plus or k <= 2:
-            return a, k - a
+            return a, b
         # "+" variants: pick the split minimizing estimated search cost
         fs = self._dedicated_slack(index, qi, forward=True)
         bs = self._dedicated_slack(index, qi, forward=False)

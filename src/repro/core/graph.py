@@ -122,6 +122,22 @@ class Graph:
         return Graph(n=self.n, indptr=self.r_indptr, indices=self.r_indices,
                      r_indptr=self.indptr, r_indices=self.indices)
 
+    # -- incremental mutation ------------------------------------------
+    def apply_delta(self, delta) -> tuple["Graph", np.ndarray]:
+        """Successor graph after a :class:`~repro.core.delta.GraphDelta`.
+
+        Merges the (deduplicated, self-loop-free) edge mutations into both
+        CSR directions without re-sorting the kept edges — equivalent to a
+        ``from_edges`` rebuild on the edited edge list, in time
+        proportional to ``m + |delta| log m``. Returns ``(new_graph,
+        touched)`` where ``touched`` holds the unique endpoints of every
+        *effective* change (no-op inserts/deletes excluded); an empty
+        ``touched`` means ``new_graph is self``.
+        """
+        from .delta import apply_delta as _apply_delta
+        applied = _apply_delta(self, delta)
+        return applied.graph, applied.touched
+
 
 def _csr(n: int, src: np.ndarray, dst: np.ndarray):
     order = np.lexsort((dst, src))

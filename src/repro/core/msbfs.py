@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["msbfs_dist", "msbfs_hop", "INF_FOR"]
+__all__ = ["msbfs_dist", "msbfs_set_dist", "msbfs_hop", "INF_FOR"]
 
 
 def INF_FOR(k_max: int) -> int:
@@ -47,6 +47,32 @@ def msbfs_hop(frontier: jax.Array, esrc: jax.Array, edst: jax.Array,
                                    indices_are_sorted=True)
         nxt = jnp.maximum(nxt, part)
     return jnp.concatenate([nxt, jnp.zeros((1, S), jnp.int8)], axis=0)
+
+
+@partial(jax.jit, static_argnames=("n", "k_max", "edge_chunk"))
+def msbfs_set_dist(esrc: jax.Array, edst: jax.Array, seed_mask: jax.Array,
+                   *, n: int, k_max: int,
+                   edge_chunk: int = 1 << 22) -> jax.Array:
+    """Distance from a vertex *set*: one bit-column seeded with every
+    member, so ``dist[v] = min over seeds of hops(seed -> v)`` in a single
+    S=1 sweep. This is what hop-scoped cache invalidation asks ("how close
+    is the nearest touched vertex?") — one compile per (n, k_max) instead
+    of one per frontier size.
+
+    seed_mask : (n+1,) int8 in {0,1} (row n must be 0).
+    Returns (n+1,) int8 with unreached = INF = k_max + 1, row n = INF.
+    """
+    INF = np.int8(INF_FOR(k_max))
+    seed = seed_mask.astype(jnp.int8)[:, None]          # (n+1, 1)
+    dist = jnp.where(seed[:, 0].astype(bool), jnp.int8(0), INF)
+    frontier = seed
+    for hop in range(1, k_max + 1):
+        reached = (dist < INF).astype(jnp.int8)
+        nxt = msbfs_hop(frontier, esrc, edst, n, edge_chunk)
+        new = nxt * (1 - reached)[:, None]
+        dist = jnp.where(new[:, 0].astype(bool), jnp.int8(hop), dist)
+        frontier = new.at[n].set(0)
+    return dist.at[n].set(INF)
 
 
 @partial(jax.jit, static_argnames=("n", "k_max", "edge_chunk"))

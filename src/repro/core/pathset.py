@@ -14,7 +14,19 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["PathSet", "HostPathSet", "empty", "singleton", "compact_rows",
-           "concat", "to_host", "offload", "upload"]
+           "concat", "to_host", "offload", "upload", "pathset_nbytes"]
+
+# per-PathSet bookkeeping charged on top of the vertex matrix (count +
+# overflow scalars); shared by HostPathSet.nbytes and the cache's
+# pre-transfer size estimate so the two can never diverge
+PATHSET_BOOKKEEPING_BYTES = 16
+
+
+def pathset_nbytes(cap: int, width: int, itemsize: int = 4) -> int:
+    """Bytes one (cap, width) path buffer accounts for — the *single*
+    byte-math used both for ``HostPathSet.nbytes`` (LRU budget accounting)
+    and for size estimates taken from device shapes before any transfer."""
+    return int(cap) * int(width) * int(itemsize) + PATHSET_BOOKKEEPING_BYTES
 
 
 class PathSet(NamedTuple):
@@ -108,7 +120,8 @@ class HostPathSet(NamedTuple):
 
     @property
     def nbytes(self) -> int:
-        return int(self.verts.nbytes) + 16  # array + scalar bookkeeping
+        return pathset_nbytes(self.verts.shape[0], self.verts.shape[1],
+                              self.verts.itemsize)
 
     @property
     def cap(self) -> int:

@@ -31,7 +31,22 @@ import numpy as np
 from .pathset import PathSet
 
 __all__ = ["Output", "Planner", "PathQuery", "QueryResult", "BatchReport",
-           "PathsStore", "QueryLike"]
+           "PathsStore", "QueryLike", "midpoint_split"]
+
+
+def midpoint_split(k: int) -> tuple[int, int]:
+    """Default forward/backward hop split of a k-hop query: ``a = (k+1)//2``
+    forward hops on G, ``b = k - a`` backward hops on G_r.
+
+    The single source of truth for the split — the engine's cluster
+    splitter and the cache-key builder (``cache.dedicated_keys``) both call
+    this, so the cache's notion of a singleton query's half-keys can never
+    drift from what the engine actually enumerates. The cost-based "+"
+    planners may override the split per query; keys derived from this
+    helper only describe the default.
+    """
+    a = (k + 1) // 2
+    return a, k - a
 
 
 class Output(enum.Enum):

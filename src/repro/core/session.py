@@ -17,8 +17,11 @@ they run a one-shot batch or stream queries through micro-batch admission:
     for qid, result in session.results().items():
         ...                    # the same QueryResult type as session.run
 
-    # graph mutation (drops all graph-derived state, incl. the cache)
+    # graph mutation: full swap (drops all graph-derived state) ...
     session.update_graph(new_graph)
+    # ... or incremental edge deltas (CSR merge + hop-scoped cache
+    # invalidation; queued to the next micro-batch boundary when streaming)
+    session.apply_delta(GraphDelta.from_pairs(add=[(u, v)], remove=[(x, y)]))
 
 The streaming machinery is imported lazily so `repro.core` never depends
 on `repro.launch` at import time.
@@ -68,7 +71,14 @@ class PathSession:
     def run(self, queries: Sequence[QueryLike],
             planner: Optional[Planner | str] = None,
             clusters: Optional[list[list[int]]] = None) -> BatchReport:
-        """Execute a batch now; returns a :class:`BatchReport`."""
+        """Execute a batch now; returns a :class:`BatchReport`.
+
+        A one-shot batch is a batch boundary: graph deltas still queued
+        behind the streaming server are applied first, so batch and
+        streaming consumers of one session never observe different graphs.
+        """
+        if self._server is not None:
+            self._server.flush_deltas()
         return self.engine.run(queries,
                                self.planner if planner is None else planner,
                                clusters)
@@ -113,9 +123,30 @@ class PathSession:
 
     # -- graph mutation ------------------------------------------------
     def update_graph(self, graph: Graph) -> None:
-        """Swap the graph: rebuilds device views and invalidates every
-        piece of graph-derived state (host dists, cross-batch cache)."""
+        """Swap the graph wholesale: rebuilds device views and invalidates
+        every piece of graph-derived state (host dists, cross-batch
+        cache). Deltas still queued behind the streaming server are
+        discarded — they were expressed against the replaced graph. For
+        incremental edge churn prefer :meth:`apply_delta`."""
+        if self._server is not None:
+            self._server.discard_pending_deltas()
         self.engine.set_graph(graph)
+
+    def apply_delta(self, delta) -> Optional[dict]:
+        """Apply a :class:`~repro.core.delta.GraphDelta` incrementally.
+
+        Batch mode (no streaming server yet): applied immediately via
+        ``BatchPathEngine.apply_delta`` — CSR merge, patched device views,
+        hop-scoped cache invalidation — and the application report is
+        returned. Streaming mode: the delta is queued and applied at the
+        next micro-batch boundary so in-flight admission always sees a
+        consistent graph snapshot; returns None (the report lands in
+        ``batch_log`` / ``server.delta_log``).
+        """
+        if self._server is not None:
+            self._server.apply_delta(delta)
+            return None
+        return self.engine.apply_delta(delta)
 
     @property
     def cache(self) -> Optional[SharedPathCache]:

@@ -84,6 +84,8 @@ class StreamingServer:
 
         srv = StreamingServer(engine, n_groups=2)
         qid = srv.submit((s, t, k))     # returns a stable query id
+        srv.apply_delta(delta)          # edge churn: applied at the next
+                                        # micro-batch boundary (see delta_log)
         srv.pump()                      # admit due micro-batches (call often)
         srv.drain()                     # flush everything still waiting
         srv.results[qid]                # QueryResult (same type as batch runs)
@@ -109,8 +111,11 @@ class StreamingServer:
             n_groups, cost_fn=lambda qs: float(len(qs)) ** 1.5)
         self.results: dict[int, QueryResult] = {}
         self.batch_log: list[dict] = []
+        self.delta_log: list[dict] = []             # per-delta engine reports
         self._waiting: list[tuple[int, PathQuery, float]] = []
         self._query_of: dict[int, PathQuery] = {}   # qid -> query
+        self._pending_deltas: list = []             # applied at batch boundary
+        self._delta_mark = 0       # delta_log watermark of the last batch
         self._next_qid = 0
 
     # -- ingress -------------------------------------------------------
@@ -129,9 +134,55 @@ class StreamingServer:
                               time.monotonic() if now is None else now))
         return qid
 
+    def apply_delta(self, delta) -> None:
+        """Queue a :class:`~repro.core.delta.GraphDelta` for application at
+        the next micro-batch boundary.
+
+        Deltas never interleave with an admitted batch — queries already
+        handed to the engine finish against the graph they were admitted
+        under, and every later admission sees the mutated graph. Queued
+        deltas are flushed (in submission order) by ``pump()`` / ``drain()``
+        even when no query batch is due; per-delta engine reports (CSR
+        merge sizes, hop-scoped cache eviction counts) append to
+        ``delta_log``, and the next batch's ``batch_log`` entry carries the
+        aggregated delta/invalidation counters.
+
+        Validated eagerly, like ``submit``: deltas only mutate edges (the
+        vertex set is fixed), so an out-of-range vertex id is rejected
+        here — not mid-flush, where the failed delta would be lost from
+        the queue while later deltas still applied.
+        """
+        n = self.engine.g.n
+        if delta.max_vertex() >= n:
+            raise ValueError(f"delta references vertices outside the graph "
+                             f"(n={n}, max id {delta.max_vertex()})")
+        self._pending_deltas.append(delta)
+
+    def flush_deltas(self) -> None:
+        """Apply every queued delta now (the caller asserts this is a
+        batch boundary — pump/drain/admission call it automatically, and
+        ``PathSession.run`` does before a one-shot batch). A delta is
+        dequeued only after it applied: if the engine raises mid-flush, the
+        failed delta stays at the head so a retry cannot silently skip it
+        while later deltas apply."""
+        while self._pending_deltas:
+            self.delta_log.append(
+                self.engine.apply_delta(self._pending_deltas[0]))
+            self._pending_deltas.pop(0)
+
+    def discard_pending_deltas(self) -> list:
+        """Drop queued deltas unapplied; returns them. A full graph swap
+        supersedes edge deltas expressed against the replaced graph —
+        applying them to the new graph would corrupt it (or crash on
+        out-of-range vertices)."""
+        dropped, self._pending_deltas = self._pending_deltas, []
+        return dropped
+
     def pump(self, now: Optional[float] = None) -> bool:
         """Admit every micro-batch the policy says is due (a burst can
-        leave several deadline-expired batches queued at once)."""
+        leave several deadline-expired batches queued at once). Queued
+        graph deltas are applied first — a batch boundary by definition."""
+        self.flush_deltas()
         admitted = False
         now = time.monotonic() if now is None else now
         while self._waiting:
@@ -144,6 +195,7 @@ class StreamingServer:
 
     def drain(self) -> None:
         """Flush: admit everything still waiting, policy notwithstanding."""
+        self.flush_deltas()
         while self._waiting:
             self._admit()
 
@@ -159,6 +211,9 @@ class StreamingServer:
 
     # -- one micro-batch -----------------------------------------------
     def _admit(self) -> None:
+        self.flush_deltas()   # an admission IS a micro-batch boundary
+        deltas = self.delta_log[self._delta_mark:]
+        self._delta_mark = len(self.delta_log)
         batch = self._waiting[:self.policy.max_batch]
         self._waiting = self._waiting[self.policy.max_batch:]
         qids = [qid for qid, _, _ in batch]
@@ -208,6 +263,16 @@ class StreamingServer:
             "steals": self.sched.steals - steals_before,
             "warm_biased": bias is not None,
             "mu_mean": float((mu.sum() - Q) / max(Q * (Q - 1), 1)),
+            # graph deltas applied since the previous micro-batch
+            "n_deltas": len(deltas),
+            "delta_edges": sum(d["n_added"] + d["n_removed"] for d in deltas),
+            "delta_cache_evicted": sum(d.get("cache_evicted", 0)
+                                       for d in deltas),
+            # survivors after the last delta that actually touched the
+            # cache (a trailing no-op delta reports nothing)
+            "delta_cache_kept": next((d["cache_kept"] for d in
+                                      reversed(deltas) if "cache_kept" in d),
+                                     0),
             **agg,
             **({"cache": self.engine.cache.info()}
                if self.engine.cache is not None else {}),
