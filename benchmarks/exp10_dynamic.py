@@ -23,11 +23,20 @@ entries (vs 0 under full invalidation), results stay oracle-exact, and
 ``apply_delta`` beats construct-plus-``update_graph`` wall time. At tiny
 CI scales the graph has no hop-cold region, so the retention/latency
 asserts relax (correctness asserts never do).
+
+Compile telemetry (``EngineConfig.log_compiles``): the delta arm runs with
+the retrace recorder on. The sentinel-padded pow2 edge buckets must keep
+the edge-shape kernels (``msbfs_dist`` / ``msbfs_set_dist`` /
+``walk_counts``) warm across every in-bucket round — asserted
+``warm_retraces == 0`` at *every* scale (CI wires this smoke). A final
+bucket-crossing delta (inserts pushing ``m`` past its pow2 bucket)
+measures the one-off retrace cost and the warm-vs-cold batch wall.
 """
 from __future__ import annotations
 
 import json
 import time
+from collections import Counter
 from pathlib import Path
 
 import jax
@@ -39,6 +48,11 @@ from repro.core.oracle import (bfs_dist_from, enumerate_paths_bruteforce,
                                path_set)
 
 from .common import record
+
+# kernels whose traced shapes depend on the device edge lists: the ones
+# the pow2 sentinel buckets exist to keep warm (enumeration caps are
+# value-planned and may legitimately re-bucket as the workload drifts)
+EDGE_KERNELS = frozenset({"msbfs_dist", "msbfs_set_dist", "walk_counts"})
 
 
 def _edge_arrays(g: Graph):
@@ -86,6 +100,29 @@ def _make_delta(g: Graph, pool: np.ndarray, n_edges: int, rng) -> GraphDelta:
     return GraphDelta.from_pairs(add=adds, remove=dels)
 
 
+def _absent_pairs(g: Graph, verts: np.ndarray, count: int, rng) -> list:
+    """``count`` distinct absent non-loop edges among ``verts`` (vectorized
+    bulk rejection — a crossing delta can need thousands of inserts)."""
+    src, dst = _edge_arrays(g)
+    have = set(zip(src.tolist(), dst.tolist()))
+    # fail fast instead of spinning forever on a saturated pool (callers
+    # pre-check feasibility and widen to the whole vertex set otherwise)
+    assert verts.size * (verts.size - 1) >= 2 * count, \
+        f"vertex pool ({verts.size}) cannot supply {count} absent pairs"
+    adds: list = []
+    seen = set()
+    while len(adds) < count:
+        u = rng.choice(verts, size=4 * count)
+        v = rng.choice(verts, size=4 * count)
+        for a, b in zip(u.tolist(), v.tolist()):
+            if a != b and (a, b) not in have and (a, b) not in seen:
+                adds.append((a, b))
+                seen.add((a, b))
+                if len(adds) == count:
+                    break
+    return adds
+
+
 def _edited_edges(g: Graph, delta: GraphDelta):
     """The successor edge list a rebuild caller would construct (vectorized
     numpy edit — the status-quo path gets a fair, fast implementation)."""
@@ -103,7 +140,8 @@ def main(scale: float = 1.0) -> dict:
     queries = generators.similar_queries(
         g0, max(8, int(16 * min(scale, 1.0))), similarity=0.85,
         k_range=(3, 4), seed=1)
-    cfg = EngineConfig(min_cap=128, cache_bytes=128 << 20)
+    cfg = EngineConfig(min_cap=128, cache_bytes=128 << 20,
+                       log_compiles=True)
     s_delta = PathSession(g0, cfg)
     s_rebuild = PathSession(g0, EngineConfig(min_cap=128,
                                              cache_bytes=128 << 20))
@@ -126,6 +164,7 @@ def main(scale: float = 1.0) -> dict:
     s_rebuild.run(queries)
 
     log = []
+    warm_kernels: Counter = Counter()   # compiles observed in warm rounds
     for rnd in range(rounds):
         g_cur = s_delta.engine.g
         delta = _make_delta(g_cur, _churn_pool(g_cur, queries), n_edges, rng)
@@ -167,6 +206,8 @@ def main(scale: float = 1.0) -> dict:
             assert path_set(r_delta[qi].paths) == truth, f"delta arm q{qi}"
             assert path_set(r_rebuild[qi].paths) == truth, f"rebuild arm q{qi}"
 
+        warm_kernels.update(rep.get("compiled_kernels", {}))
+        warm_kernels.update(r_delta.stats.get("compiled_kernels", {}))
         log.append({
             "round": rnd, "delta_edges": delta.n_add + delta.n_del,
             "entries_before": entries_before,
@@ -177,7 +218,41 @@ def main(scale: float = 1.0) -> dict:
             "hits_rebuild": r_rebuild.stats["n_cache_hits"],
             "mat_delta": r_delta.stats["n_materialized"],
             "mat_rebuild": r_rebuild.stats["n_materialized"],
+            "compiles_delta": rep.get("n_compiles", 0)
+            + r_delta.stats.get("n_compiles", 0),
         })
+
+    # -- bucket-crossing churn: the one mutation class allowed to retrace.
+    # Insert enough edges to push m past its pow2 bucket, then measure the
+    # cold (retracing) batch vs the immediately-following warm batch.
+    eng = s_delta.engine
+    g_cur = eng.g
+    m_warm = int(g_cur.m)      # the edge count every warm-loop metric saw
+    need = eng.dg.m_cap - g_cur.m + 1
+    pool_c = _churn_pool(g_cur, queries)
+    # the cold pool must offer enough absent pairs for the crossing
+    # inserts (same feasibility guard as _make_delta), else draw anywhere
+    verts_c = pool_c if pool_c.size * (pool_c.size - 1) >= 4 * need \
+        else np.arange(g_cur.n)
+    crossing = GraphDelta.from_pairs(
+        add=_absent_pairs(g_cur, verts_c, need, rng))
+    m_cap_before = eng.dg.m_cap
+    t0 = time.perf_counter()
+    rep_cross = s_delta.apply_delta(crossing)
+    t_apply_cross = time.perf_counter() - t0
+    assert eng.dg.m_cap > m_cap_before, "crossing delta stayed in bucket?"
+    t0 = time.perf_counter()
+    r_cross = s_delta.run(queries)
+    w_cross = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    r_after = s_delta.run(queries)
+    w_after = time.perf_counter() - t0
+    s, t, k = queries[0]
+    truth = path_set(enumerate_paths_bruteforce(eng.g, s, t, k))
+    assert path_set(r_cross[0].paths) == truth, "crossing arm q0"
+    assert path_set(r_after[0].paths) == truth, "post-crossing arm q0"
+    crossing_kernels = Counter(rep_cross.get("compiled_kernels", {}))
+    crossing_kernels.update(r_cross.stats.get("compiled_kernels", {}))
 
     retained = [r["cache_kept"] / max(r["entries_before"], 1) for r in log]
     p50_delta = float(np.median([r["batch_wall_delta_s"] for r in log]))
@@ -185,7 +260,8 @@ def main(scale: float = 1.0) -> dict:
     t_apply_med = float(np.median([r["t_apply_delta_s"] for r in log]))
     t_update_med = float(np.median([r["t_update_graph_s"] for r in log]))
     summary = {
-        "n": n, "m": int(s_delta.engine.g.m), "n_queries": len(queries),
+        "n": n, "m": m_warm, "m_final": int(s_delta.engine.g.m),
+        "n_queries": len(queries),
         "rounds": rounds, "delta_edges_per_round": n_edges * 2,
         "strict": bool(strict), "strict_latency": bool(strict_latency),
         "retained_frac_mean": float(np.mean(retained)),
@@ -196,6 +272,21 @@ def main(scale: float = 1.0) -> dict:
         "apply_speedup": t_update_med / max(t_apply_med, 1e-9),
         "hits_delta_total": sum(r["hits_delta"] for r in log),
         "hits_rebuild_total": sum(r["hits_rebuild"] for r in log),
+        # in-bucket churn must keep every edge-shape kernel warm
+        "warm_retraces": sum(c for name, c in warm_kernels.items()
+                             if name in EDGE_KERNELS),
+        "warm_compiles_by_kernel": dict(warm_kernels),
+        "bucket_crossing": {
+            "delta_edges": crossing.n_add,
+            "m_cap_before": m_cap_before, "m_cap_after": eng.dg.m_cap,
+            "t_apply_s": t_apply_cross,
+            "batch_wall_cold_s": w_cross,      # pays the retraces
+            "batch_wall_warm_s": w_after,      # next round: warm again
+            "retraces_by_kernel": dict(crossing_kernels),
+            "edge_kernel_retraces": sum(c for name, c in
+                                        crossing_kernels.items()
+                                        if name in EDGE_KERNELS),
+        },
         "rounds_log": log,
         "cache": s_delta.cache.info(),
     }
@@ -207,6 +298,10 @@ def main(scale: float = 1.0) -> dict:
     record("exp10_apply_vs_update", t_apply_med * 1e6,
            f"update_graph={t_update_med * 1e6:.0f}us "
            f"speedup={summary['apply_speedup']:.2f}x")
+    record("exp10_bucket_crossing", w_cross * 1e6,
+           f"warm={w_after * 1e6:.0f}us "
+           f"edge_retraces={summary['bucket_crossing']['edge_kernel_retraces']} "
+           f"warm_loop_retraces={summary['warm_retraces']}")
     # the committed artifact records the full-scale workload; tiny smoke
     # runs (CI) must not clobber it — they write under results/ instead
     out = (Path("BENCH_dynamic.json") if scale >= 1.0
@@ -216,6 +311,11 @@ def main(scale: float = 1.0) -> dict:
 
     # full invalidation drops everything, by construction
     assert summary["hits_rebuild_total"] == 0, "rebuild arm kept warm state?"
+    # shape-stability contract, scale-independent: in-bucket churn never
+    # retraces an edge-shape kernel (CI smoke-asserts this via the json)
+    assert summary["warm_retraces"] == 0, summary["warm_compiles_by_kernel"]
+    assert summary["bucket_crossing"]["edge_kernel_retraces"] > 0, \
+        "crossing should have paid (and measured) the edge-kernel retrace"
     if strict:
         assert summary["retained_frac_min"] >= 0.5, (
             f"small delta must preserve >=50% of cache entries, got "

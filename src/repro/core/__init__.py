@@ -7,11 +7,13 @@ from .query import (PathQuery, QueryResult, BatchReport, Planner, Output,
 from .engine import BatchPathEngine, EngineConfig, EngineOverflow, BatchResult
 from .session import PathSession
 from .index import build_index, QueryIndex
-from . import generators, oracle
+from .compilelog import CompileLog
+from . import compilelog, generators, oracle
 
 __all__ = ["Graph", "DeviceGraph", "GraphDelta", "AppliedDelta",
            "BatchPathEngine", "EngineConfig",
            "EngineOverflow", "BatchResult", "SharedPathCache",
            "PathQuery", "QueryResult", "BatchReport", "Planner", "Output",
-           "QueryLike", "PathSession",
-           "build_index", "QueryIndex", "generators", "oracle"]
+           "QueryLike", "PathSession", "CompileLog",
+           "build_index", "QueryIndex", "compilelog", "generators",
+           "oracle"]

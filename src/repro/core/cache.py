@@ -25,6 +25,15 @@ Canonical cache key::
                           disabled); it changes the materialized levels so
                           it must be part of the key.
 
+Keys and entries are deliberately **shape-agnostic**: no component of the
+key (and nothing inside an entry) records the device graph's padded edge
+bucket ``m_cap``, its ELL capacities, or any other capacity artifact —
+entries only pin their *own* PathSet capacity buckets so a re-upload
+restores the exact jit shapes of the original materialization. A delta
+that grows the edge bucket (retracing the edge kernels once) therefore
+still gets exact cache hits for every entry the hop-scoped invalidation
+kept; tests/test_cache.py pins this.
+
 Entries are stored host-side (``HostPathSet``) with byte-accurate
 accounting; the cache is a bytes-budgeted LRU. It is only valid for one
 graph, tracked per entry by an epoch: a wholesale swap must call

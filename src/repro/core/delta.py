@@ -18,10 +18,12 @@ proportional to its *size* instead:
                          locality radius everything downstream (ELL row
                          refresh, hop-scoped cache invalidation) keys off.
   * ``update_device_graph`` -- patches a :class:`DeviceGraph` in place of a
-                         full rebuild: edge lists re-uploaded (their length
-                         changed), but only touched ELL rows recomputed and
-                         scattered; falls back to ``DeviceGraph.build``
-                         when a row outgrows the current capacity.
+                         full rebuild: edge lists re-uploaded sentinel-
+                         padded inside their pow2 shape bucket (no traced
+                         shape changes while churn stays in-bucket), only
+                         touched ELL rows recomputed and scattered; falls
+                         back to ``DeviceGraph.build`` when a row outgrows
+                         the current ELL capacity.
   * ``host_set_dist``   -- BFS from the touched frontier for hop-scoped
                          cache invalidation. Both endpoints of every
                          changed edge are seeds, so frontier distances
@@ -40,17 +42,11 @@ from typing import NamedTuple, Optional, Sequence
 
 import numpy as np
 
-from .graph import DeviceGraph, Graph, _ragged_arange
+from .graph import (DeviceGraph, Graph, _ragged_arange, pad_edge_list,
+                    pow2_ceil)
 
 __all__ = ["GraphDelta", "AppliedDelta", "apply_delta",
            "update_device_graph", "host_set_dist", "pow2_ceil"]
-
-
-def pow2_ceil(x: int) -> int:
-    """Smallest power of two >= x (1 for x <= 1) — the shared shape-bucket
-    rounding for delta-path device work (edge pads, ELL scatters, MS-BFS
-    hop budgets)."""
-    return 1 << max(int(x) - 1, 0).bit_length() if x > 1 else 1
 
 
 def _normalize_pairs(src, dst, drop_self_loops: bool) -> tuple[np.ndarray, np.ndarray]:
@@ -267,11 +263,17 @@ def update_device_graph(dg: DeviceGraph, applied: AppliedDelta,
                         ) -> tuple[DeviceGraph, bool]:
     """Patch device views for a merged delta; ``(new_dg, incremental)``.
 
-    Edge lists are re-uploaded (their length changed) but the padded ELL
-    matrices — the big (n, cap) buffers the kernels read — are updated by
-    scattering only the touched rows. Falls back to a full
-    ``DeviceGraph.build`` when a touched row outgrows the current capacity
-    (the ELL must stay spill-free for enumeration).
+    Every updated view keeps its shape bucket: edge lists are re-uploaded
+    sentinel-padded to the *current* ``m_cap`` (growing to the next pow2
+    bucket only when the valid count outgrows it — shrinking never
+    reclaims, so repeated grow/shrink around a boundary cannot thrash),
+    and the padded ELL matrices — the big (n, cap) buffers the kernels
+    read — are updated by scattering only the touched rows. In-bucket
+    churn therefore changes no traced shape and re-uses every warm
+    compile. Falls back to a full ``DeviceGraph.build`` when a touched
+    row outgrows the current ELL capacity (the ELL must stay spill-free
+    for enumeration); the rebuild re-buckets and is the one mutation that
+    may retrace — at most once per bucket crossing.
     """
     import jax.numpy as jnp
 
@@ -284,7 +286,12 @@ def update_device_graph(dg: DeviceGraph, applied: AppliedDelta,
     rev_deg = g2.r_indptr[rev_rows + 1] - g2.r_indptr[rev_rows]
     if ((fwd_deg.size and int(fwd_deg.max()) > dg.ell_cap)
             or (rev_deg.size and int(rev_deg.max()) > dg.r_ell_cap)):
-        return DeviceGraph.build(g2), False
+        # the rebuild keeps every bucket monotone too: edge cap and ELL
+        # caps only grow, so an overflow after deletion-heavy churn cannot
+        # shrink a bucket and re-thrash the next insert wave
+        return DeviceGraph.build(
+            g2, edge_cap=max(dg.m_cap, pow2_ceil(g2.m)),
+            min_ell_caps=(dg.ell_cap, dg.r_ell_cap)), False
 
     ell_idx, ell_mask = dg.ell_idx, dg.ell_mask
     if fwd_rows.size:
@@ -296,8 +303,9 @@ def update_device_graph(dg: DeviceGraph, applied: AppliedDelta,
                                               rev_rows, dg.r_ell_cap,
                                               reverse=True)
 
-    esrc, edst = g2.edges_by_dst
-    r_esrc, r_edst = g2.r_edges_by_dst
+    cap = dg.m_cap if g2.m <= dg.m_cap else pow2_ceil(g2.m)
+    esrc, edst = pad_edge_list(*g2.edges_by_dst, g2.n, cap)
+    r_esrc, r_edst = pad_edge_list(*g2.r_edges_by_dst, g2.n, cap)
     return dataclasses.replace(
         dg, m=g2.m,
         esrc=jnp.asarray(esrc), edst=jnp.asarray(edst),

@@ -51,8 +51,10 @@ def distributed_graph(g: Graph, mesh, axes=("cells",)) -> DeviceGraph:
     dg = DeviceGraph.build(g)
     esrc, edst = shard_edges(dg.esrc, dg.edst, mesh, axes)
     r_esrc, r_edst = shard_edges(dg.r_esrc, dg.r_edst, mesh, axes)
+    # m stays the *valid* edge count: the pow2 sentinel pad (and any
+    # device-multiple pad added here) is capacity, not edges
     return DeviceGraph(
-        n=dg.n, m=int(esrc.shape[0]),
+        n=dg.n, m=dg.m,
         esrc=esrc, edst=edst,
         ell_idx=dg.ell_idx, ell_mask=dg.ell_mask,
         r_esrc=r_esrc, r_edst=r_edst,

@@ -25,12 +25,13 @@ from typing import Callable, Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from . import compilelog
 from .cache import SharedPathCache
 from .delta import (AppliedDelta, GraphDelta, apply_delta as _merge_delta,
                     host_set_dist, pow2_ceil as _pow2, update_device_graph)
 from .graph import DeviceGraph, Graph
 from .index import QueryIndex, build_index, slack_from_dists, walk_counts
-from .msbfs import msbfs_set_dist
+from .msbfs import edge_span, msbfs_set_dist
 from .pathset import PathSet, concat, empty, singleton
 from .enumerate import (count_ending_at, expand_level, extract_rows,
                         select_ending_at)
@@ -73,6 +74,8 @@ class EngineConfig:
     delta_backend: str = "host"     # "host": vectorized CSR BFS over the
     # touched balls (cost ~ ball edges); "msbfs": device set-seeded MS-BFS
     # (for accelerator-resident graphs where m is device-scale)
+    log_compiles: bool = False      # compile telemetry: per-kernel retrace
+    # counts in run()/apply_delta() stats (core.compilelog recorder)
 
 
 @dataclasses.dataclass
@@ -116,6 +119,11 @@ class BatchPathEngine:
         if cache is None and self.cfg.cache_bytes > 0:
             cache = SharedPathCache(self.cfg.cache_bytes)
         self.cache = cache
+        # process-wide recorder (jit caches are process-global); None when
+        # telemetry is off — every run()/apply_delta() report then carries
+        # n_compiles / n_retraces / compiled_kernels for its window
+        self.compile_log = compilelog.enable() if self.cfg.log_compiles \
+            else None
 
     def set_graph(self, graph: Graph) -> None:
         """Swap the graph wholesale: rebuild device views and drop every
@@ -142,7 +150,20 @@ class BatchPathEngine:
         already present/absent) leaves all state — including the host
         distance memo — untouched; an effective delta drops only that
         memo, which the next batch's index rebuilds anyway.
+
+        Device views stay in their pow2 shape buckets (sentinel-padded
+        edge lists, bucketed ELL capacities), so an in-bucket delta
+        triggers no retrace; with ``EngineConfig.log_compiles`` the report
+        carries the window's ``n_compiles`` / ``n_retraces``.
         """
+        if self.compile_log is None:
+            return self._apply_delta_impl(delta)
+        snap = self.compile_log.snapshot()
+        report = self._apply_delta_impl(delta)
+        self.compile_log.annotate(report, snap)
+        return report
+
+    def _apply_delta_impl(self, delta: GraphDelta) -> dict:
         t0 = time.perf_counter()
         applied = _merge_delta(self.g, delta)
         report = {
@@ -209,22 +230,16 @@ class BatchPathEngine:
         seed[applied.touched] = 1
         seed = jnp.asarray(seed)
 
-        def pad(a):
-            # pow2-bucket the edge length by repeating the last edge
-            # (duplicates change no distance, the list stays dst-sorted):
-            # without this, any delta with n_add != n_del shifts m and
-            # retraces the sweep on every subsequent delta
-            cap = _pow2(a.shape[0])
-            if cap == a.shape[0] or a.shape[0] == 0:
-                return a
-            return jnp.concatenate(
-                [a, jnp.full(cap - a.shape[0], a[-1], a.dtype)])
-
+        # the still-resident old edge lists are already sentinel-padded to
+        # their pow2 bucket (DeviceGraph.build / update_device_graph), so
+        # the sweep's traced shape is stable across deltas by construction
         dists = {}
+        m_valid = edge_span(self.dg.m, self.cfg.edge_chunk, self.dg.m_cap)
         for name, (esrc, edst) in (("from", (self.dg.esrc, self.dg.edst)),
                                    ("to", (self.dg.r_esrc, self.dg.r_edst))):
-            d = msbfs_set_dist(pad(esrc), pad(edst), seed, n=self.g.n,
-                               k_max=k_max, edge_chunk=self.cfg.edge_chunk)
+            d = msbfs_set_dist(esrc, edst, seed, n=self.g.n,
+                               k_max=k_max, edge_chunk=self.cfg.edge_chunk,
+                               m_valid=m_valid)
             dists[name] = np.asarray(d)
         return dists
 
@@ -260,7 +275,22 @@ class BatchPathEngine:
         clusters with a cache-aware bias — keeps its grouping instead of
         this method re-running similarity + clustering over the same
         queries.
+
+        With ``EngineConfig.log_compiles`` the report stats carry this
+        run's compile-telemetry window: ``n_compiles`` (trace-cache
+        misses), ``n_retraces`` (misses on kernels that were already warm
+        — zero on a shape-stable serving path) and ``compiled_kernels``.
         """
+        if self.compile_log is None:
+            return self._run_impl(queries, planner, clusters)
+        snap = self.compile_log.snapshot()
+        report = self._run_impl(queries, planner, clusters)
+        self.compile_log.annotate(report.stats, snap)
+        return report
+
+    def _run_impl(self, queries: Sequence[QueryLike],
+                  planner: Planner | str,
+                  clusters: Optional[list[list[int]]]) -> BatchReport:
         qs = tuple(PathQuery.coerce(q).check_bounds(self.g.n)
                    for q in queries)
         planner = Planner.coerce(planner)
@@ -707,12 +737,15 @@ class BatchPathEngine:
         # "+" variants: pick the split minimizing estimated search cost
         fs = self._dedicated_slack(index, qi, forward=True)
         bs = self._dedicated_slack(index, qi, forward=False)
+        mv = self._m_valid()
         cf = np.asarray(walk_counts(self.dg.esrc, self.dg.edst, s, fs,
                                     n=self.dg.n, budget=k - 1,
-                                    edge_chunk=self.cfg.edge_chunk))
+                                    edge_chunk=self.cfg.edge_chunk,
+                                    m_valid=mv))
         cb = np.asarray(walk_counts(self.dg.r_esrc, self.dg.r_edst, t, bs,
                                     n=self.dg.n, budget=k - 1,
-                                    edge_chunk=self.cfg.edge_chunk))
+                                    edge_chunk=self.cfg.edge_chunk,
+                                    m_valid=mv))
         best, best_cost = a, None
         for cand in range(1, k):
             cost = cf[:cand + 1].sum() + cb[:k - cand + 1].sum()
@@ -744,6 +777,11 @@ class BatchPathEngine:
             cols = np.asarray(index.dist_s[:-1, index.src_col[list(cluster)]])
         return (cols.min(axis=1) <= k_max)
 
+    def _m_valid(self) -> int:
+        """Chunk-rounded valid-edge span of the (sentinel-padded) device
+        edge lists — the static ``m_valid`` every edge kernel receives."""
+        return edge_span(self.dg.m, self.cfg.edge_chunk, self.dg.m_cap)
+
     def _plan_caps(self, reverse: bool, source: int, budget: int, slack):
         if not self.cfg.plan_caps:
             return [self.cfg.min_cap] * (budget + 1)
@@ -751,7 +789,8 @@ class BatchPathEngine:
         edst = self.dg.r_edst if reverse else self.dg.edst
         tot = np.asarray(walk_counts(esrc, edst, source, slack, n=self.dg.n,
                                      budget=budget,
-                                     edge_chunk=self.cfg.edge_chunk))
+                                     edge_chunk=self.cfg.edge_chunk,
+                                     m_valid=self._m_valid()))
         caps = [_bucket(min(int(min(t, 2**31)), self.cfg.max_cap),
                         self.cfg.min_cap) for t in tot]
         return caps

@@ -12,6 +12,17 @@ jit-compilable:
                       zero row); drives the Pallas kernels and the
                       enumeration gather. Vertices with deg > cap spill to a
                       COO remainder (power-law safety valve).
+
+Shape stability under mutation: every *device* view is quantized to a
+power-of-two bucket so incremental edge churn (``delta.apply_delta``)
+re-uses warm XLA compiles instead of retracing on each new ``(m,)``.
+Edge lists are padded with **sentinel edges** ``(n, n)``: ``edst = n`` is
+out of segment range, so ``segment_max`` / ``segment_sum`` drop the
+message, and ``esrc = n`` gathers the all-zero sentinel row that every
+frontier table carries — a sentinel edge is inert in both the boolean BFS
+semiring and the walk-count DP. ELL capacities are bucketed the same way,
+so a touched row growing within its bucket never changes the ``(n, cap)``
+kernel shapes.
 """
 from __future__ import annotations
 
@@ -21,9 +32,37 @@ from typing import Optional
 
 import numpy as np
 
-__all__ = ["Graph", "DeviceGraph", "EllView"]
+__all__ = ["Graph", "DeviceGraph", "EllView", "pow2_ceil", "pad_edge_list"]
 
 SENTINEL = -1
+
+
+def pow2_ceil(x: int) -> int:
+    """Smallest power of two >= x (1 for x <= 1) — the shared shape-bucket
+    rounding for every device view (edge-list pads, ELL capacities, the
+    delta path's scatter widths and MS-BFS hop budgets)."""
+    return 1 << max(int(x) - 1, 0).bit_length() if x > 1 else 1
+
+
+def pad_edge_list(esrc: np.ndarray, edst: np.ndarray, n: int,
+                  cap: int) -> tuple[np.ndarray, np.ndarray]:
+    """Sentinel-pad a dst-sorted edge list to ``cap`` entries.
+
+    Sentinel edges are ``(n, n)``: dropped by segment reductions over
+    ``num_segments = n`` and reading the zero sentinel row on gathers, so
+    the padded list is semantically identical to the exact one. ``n``
+    sorts after every real destination, so the dst-sorted invariant (and
+    ``indices_are_sorted=True`` segment ops) survives the pad.
+    """
+    m = int(esrc.shape[0])
+    if cap < m:
+        raise ValueError(f"edge bucket {cap} smaller than edge count {m}")
+    if cap == m:
+        return esrc.astype(np.int32, copy=False), \
+            edst.astype(np.int32, copy=False)
+    pad = np.full(cap - m, n, dtype=np.int32)
+    return (np.concatenate([esrc.astype(np.int32, copy=False), pad]),
+            np.concatenate([edst.astype(np.int32, copy=False), pad]))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -160,12 +199,19 @@ def _ragged_arange(counts: np.ndarray) -> np.ndarray:
 
 @dataclasses.dataclass(frozen=True)
 class DeviceGraph:
-    """jnp views of a Graph (built once per engine instance)."""
+    """jnp views of a Graph (built once per engine instance).
+
+    ``m`` is the *valid* edge count; the edge arrays themselves are padded
+    to the ``m_cap`` pow2 bucket with sentinel ``(n, n)`` edges (see
+    :func:`pad_edge_list`), and ELL capacities are pow2-bucketed, so the
+    traced shapes of every downstream kernel stay constant while the graph
+    mutates within its buckets.
+    """
 
     n: int
-    m: int
+    m: int                   # valid edge count (m_valid); arrays hold m_cap
     # forward direction
-    esrc: "jax.Array"        # (m,) int32 sorted by dst
+    esrc: "jax.Array"        # (m_cap,) int32 sorted by dst, sentinel = n
     edst: "jax.Array"
     ell_idx: "jax.Array"     # (n, cap) int32, pad = n
     ell_mask: "jax.Array"
@@ -177,18 +223,56 @@ class DeviceGraph:
     ell_cap: int
     r_ell_cap: int
 
+    @property
+    def m_cap(self) -> int:
+        """Padded edge-bucket capacity (== m when built with pad=False)."""
+        return int(self.esrc.shape[0])
+
+    @property
+    def m_valid(self) -> int:
+        """Valid (non-sentinel) edge count — alias of ``m``, named for the
+        kernels it is threaded through."""
+        return self.m
+
     @staticmethod
-    def build(g: Graph, ell_cap: Optional[int] = None) -> "DeviceGraph":
+    def build(g: Graph, ell_cap: Optional[int] = None, *,
+              pad: bool = True, edge_cap: Optional[int] = None,
+              min_ell_caps: tuple[int, int] = (1, 1),
+              ) -> "DeviceGraph":
+        """Materialize device views.
+
+        pad=True (default) quantizes every shape to pow2 buckets: edge
+        lists sentinel-padded to ``edge_cap`` (default ``pow2_ceil(m)``)
+        and, when ``ell_cap`` is not given, ELL capacities bucketed to
+        ``pow2_ceil(max degree)`` per direction, floored at
+        ``min_ell_caps`` (fwd, rev) — the delta path passes its current
+        caps so a rebuild never shrinks a bucket and grow/shrink churn
+        around a boundary cannot thrash. pad=False keeps the exact
+        legacy shapes (tests use it to assert padded/unpadded parity).
+        """
         import jax.numpy as jnp
 
-        ell = g.ell(cap=ell_cap)
-        rell = g.reverse().ell(cap=ell_cap)
+        if pad and ell_cap is None:
+            deg = np.diff(g.indptr)
+            r_deg = np.diff(g.r_indptr)
+            cap_f = max(pow2_ceil(int(deg.max()) if deg.size else 1),
+                        min_ell_caps[0])
+            cap_r = max(pow2_ceil(int(r_deg.max()) if r_deg.size else 1),
+                        min_ell_caps[1])
+        else:
+            cap_f = cap_r = ell_cap
+        ell = g.ell(cap=cap_f)
+        rell = g.reverse().ell(cap=cap_r)
         if ell.spill_src.size or rell.spill_src.size:
             raise ValueError(
                 "ell_cap too small: spill present; enumeration requires the "
                 "full ELL (pass ell_cap=None or >= max degree)")
         esrc, edst = g.edges_by_dst
         r_esrc, r_edst = g.r_edges_by_dst
+        if pad:
+            cap = pow2_ceil(g.m) if edge_cap is None else int(edge_cap)
+            esrc, edst = pad_edge_list(esrc, edst, g.n, cap)
+            r_esrc, r_edst = pad_edge_list(r_esrc, r_edst, g.n, cap)
         return DeviceGraph(
             n=g.n, m=g.m,
             esrc=jnp.asarray(esrc), edst=jnp.asarray(edst),

@@ -18,14 +18,14 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .graph import DeviceGraph, Graph
-from .msbfs import msbfs_dist, INF_FOR
+from .msbfs import edge_span, msbfs_dist, INF_FOR
 
 __all__ = ["QueryIndex", "build_index", "walk_counts", "slack_from_dists"]
 
@@ -80,43 +80,58 @@ def slack_from_dists(dist_cols: jax.Array, ks: np.ndarray, offsets: np.ndarray,
 
 def build_index(dg: DeviceGraph, queries: Sequence[Query],
                 edge_chunk: int = 1 << 22) -> QueryIndex:
-    """Multi-source BFS from all sources on G and all targets on G_r."""
+    """Multi-source BFS from all sources on G and all targets on G_r.
+
+    ``dg``'s edge lists may be sentinel-padded to a pow2 bucket; the
+    chunk-rounded valid-edge span (``edge_span``) is threaded into the
+    MS-BFS so the sweep skips all-sentinel chunks without the raw edge
+    count ever becoming a trace-shaping value.
+    """
     queries = tuple((int(s), int(t), int(k)) for s, t, k in queries)
     k_max = max(k for _, _, k in queries)
     srcs = np.unique(np.array([q[0] for q in queries], np.int32))
     tgts = np.unique(np.array([q[1] for q in queries], np.int32))
     src_col = np.searchsorted(srcs, [q[0] for q in queries]).astype(np.int32)
     tgt_col = np.searchsorted(tgts, [q[1] for q in queries]).astype(np.int32)
+    m_valid = edge_span(dg.m, edge_chunk, dg.m_cap)
     dist_s = msbfs_dist(dg.esrc, dg.edst, jnp.asarray(srcs),
-                        n=dg.n, k_max=k_max, edge_chunk=edge_chunk)
+                        n=dg.n, k_max=k_max, edge_chunk=edge_chunk,
+                        m_valid=m_valid)
     dist_t = msbfs_dist(dg.r_esrc, dg.r_edst, jnp.asarray(tgts),
-                        n=dg.n, k_max=k_max, edge_chunk=edge_chunk)
+                        n=dg.n, k_max=k_max, edge_chunk=edge_chunk,
+                        m_valid=m_valid)
     return QueryIndex(queries=queries, k_max=k_max, sources=srcs, targets=tgts,
                       src_col=src_col, tgt_col=tgt_col,
                       dist_s=dist_s, dist_t=dist_t, INF=INF_FOR(k_max))
 
 
-@partial(jax.jit, static_argnames=("n", "budget", "edge_chunk"))
+@partial(jax.jit, static_argnames=("n", "budget", "edge_chunk", "m_valid"))
 def walk_counts(esrc: jax.Array, edst: jax.Array, source, slack: jax.Array,
-                *, n: int, budget: int, edge_chunk: int = 1 << 22) -> jax.Array:
+                *, n: int, budget: int, edge_chunk: int = 1 << 22,
+                m_valid: Optional[int] = None) -> jax.Array:
     """Per-level pruned-walk counts: upper bound on enumeration frontier sizes.
 
     Returns (budget+1,) float32 totals (level 0 == 1). Uses float to avoid
     overflow on explosive workloads; the planner clamps anyway.
+
+    The count vector carries the zero sentinel row ``n``, so a sentinel
+    edge ``(n, n)`` gathers 0.0 and its segment id is dropped — padded and
+    exact edge lists produce bit-equal totals. ``m_valid`` is the
+    chunk-rounded span from :func:`~repro.core.msbfs.edge_span` (static;
+    callers must pre-round).
     """
-    c = jnp.zeros((n,), jnp.float32).at[source].set(1.0)
-    totals = [jnp.float32(1.0)]
-    keep0 = (slack[:-1] >= 0)
     m = esrc.shape[0]
+    m_used = m if m_valid is None else min(int(m_valid), m)
+    c = jnp.zeros((n + 1,), jnp.float32).at[source].set(1.0)
+    totals = [jnp.float32(1.0)]
     for lvl in range(1, budget + 1):
         nxt = jnp.zeros((n,), jnp.float32)
-        for lo in range(0, m, edge_chunk):
+        for lo in range(0, m_used, edge_chunk):
             hi = min(lo + edge_chunk, m)
             msgs = c[esrc[lo:hi]]
             nxt = nxt + jax.ops.segment_sum(msgs, edst[lo:hi], num_segments=n,
                                             indices_are_sorted=True)
         nxt = nxt * (slack[:-1] >= lvl)
-        c = nxt
+        c = jnp.concatenate([nxt, jnp.zeros((1,), jnp.float32)])
         totals.append(jnp.sum(nxt))
-    del keep0
     return jnp.stack(totals)

@@ -13,34 +13,63 @@ Two backends:
                   validated against this reference in interpret mode.
 
 Distances are int8 (k_max <= 120); unreached = INF = k_max + 1.
+
+Sentinel padding: edge lists may be pow2-bucketed with sentinel edges
+``(n, n)`` (``graph.pad_edge_list``). A sentinel edge gathers the all-zero
+frontier row ``n`` and its ``edst = n`` falls outside ``num_segments = n``,
+so segment reductions drop it — padded and exact edge lists are
+bit-equivalent. Callers pass ``m_valid`` (the chunk-rounded valid-edge
+span from :func:`edge_span`) so the chunk loop skips all-sentinel chunks;
+it is a static jit argument, which is why it must be pre-rounded — raw
+per-delta edge counts would retrace on every mutation.
 """
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["msbfs_dist", "msbfs_set_dist", "msbfs_hop", "INF_FOR"]
+__all__ = ["msbfs_dist", "msbfs_set_dist", "msbfs_hop", "INF_FOR",
+           "edge_span"]
 
 
 def INF_FOR(k_max: int) -> int:
     return k_max + 1
 
 
+def edge_span(m_valid: int, edge_chunk: int, m_cap: int) -> int:
+    """Chunk-rounded prefix of a sentinel-padded edge list that the chunked
+    sweeps must visit: ``m_valid`` rounded *up* to an ``edge_chunk``
+    multiple, clamped to ``m_cap``. Rounding up means every edge count
+    inside one chunk-granule maps to the same static value — in-bucket
+    churn cannot retrace a kernel, only crossing a chunk (or bucket)
+    boundary can."""
+    if m_valid >= m_cap:
+        return int(m_cap)
+    return int(min(-(-int(m_valid) // int(edge_chunk)) * int(edge_chunk),
+                   m_cap))
+
+
 def msbfs_hop(frontier: jax.Array, esrc: jax.Array, edst: jax.Array,
-              n: int, edge_chunk: int = 1 << 22) -> jax.Array:
+              n: int, edge_chunk: int = 1 << 22,
+              m_valid: Optional[int] = None) -> jax.Array:
     """One BFS relaxation: next[v, s] = OR over edges (u->v) frontier[u, s].
 
     frontier: (n+1, S) int8 in {0,1} (row n = sentinel zeros).
+    m_valid: chunk-rounded valid-edge span (see :func:`edge_span`); None
+    sweeps the full (possibly sentinel-padded) list — correct either way,
+    the rounding only skips provably all-sentinel chunks.
     Returns (n+1, S) int8.
     """
     S = frontier.shape[1]
     m = esrc.shape[0]
+    m_used = m if m_valid is None else min(int(m_valid), m)
     nxt = jnp.zeros((n, S), dtype=jnp.int8)
     # static chunking keeps the (Ec, S) gather bounded
-    for lo in range(0, m, edge_chunk):
+    for lo in range(0, m_used, edge_chunk):
         hi = min(lo + edge_chunk, m)
         msgs = frontier[esrc[lo:hi]]                      # (Ec, S) int8
         part = jax.ops.segment_max(msgs, edst[lo:hi], num_segments=n,
@@ -49,10 +78,10 @@ def msbfs_hop(frontier: jax.Array, esrc: jax.Array, edst: jax.Array,
     return jnp.concatenate([nxt, jnp.zeros((1, S), jnp.int8)], axis=0)
 
 
-@partial(jax.jit, static_argnames=("n", "k_max", "edge_chunk"))
+@partial(jax.jit, static_argnames=("n", "k_max", "edge_chunk", "m_valid"))
 def msbfs_set_dist(esrc: jax.Array, edst: jax.Array, seed_mask: jax.Array,
-                   *, n: int, k_max: int,
-                   edge_chunk: int = 1 << 22) -> jax.Array:
+                   *, n: int, k_max: int, edge_chunk: int = 1 << 22,
+                   m_valid: Optional[int] = None) -> jax.Array:
     """Distance from a vertex *set*: one bit-column seeded with every
     member, so ``dist[v] = min over seeds of hops(seed -> v)`` in a single
     S=1 sweep. This is what hop-scoped cache invalidation asks ("how close
@@ -68,16 +97,17 @@ def msbfs_set_dist(esrc: jax.Array, edst: jax.Array, seed_mask: jax.Array,
     frontier = seed
     for hop in range(1, k_max + 1):
         reached = (dist < INF).astype(jnp.int8)
-        nxt = msbfs_hop(frontier, esrc, edst, n, edge_chunk)
+        nxt = msbfs_hop(frontier, esrc, edst, n, edge_chunk, m_valid)
         new = nxt * (1 - reached)[:, None]
         dist = jnp.where(new[:, 0].astype(bool), jnp.int8(hop), dist)
         frontier = new.at[n].set(0)
     return dist.at[n].set(INF)
 
 
-@partial(jax.jit, static_argnames=("n", "k_max", "edge_chunk"))
+@partial(jax.jit, static_argnames=("n", "k_max", "edge_chunk", "m_valid"))
 def msbfs_dist(esrc: jax.Array, edst: jax.Array, sources: jax.Array,
-               *, n: int, k_max: int, edge_chunk: int = 1 << 22) -> jax.Array:
+               *, n: int, k_max: int, edge_chunk: int = 1 << 22,
+               m_valid: Optional[int] = None) -> jax.Array:
     """Distances from each source, capped at k_max.
 
     esrc/edst : (m,) int32 edges sorted by dst (use reverse edges for G_r).
@@ -92,7 +122,7 @@ def msbfs_dist(esrc: jax.Array, edst: jax.Array, sources: jax.Array,
     frontier = jnp.zeros((n + 1, S), jnp.int8).at[sources, jnp.arange(S)].set(1)
     for hop in range(1, k_max + 1):
         reached = (dist < INF).astype(jnp.int8)
-        nxt = msbfs_hop(frontier, esrc, edst, n, edge_chunk)
+        nxt = msbfs_hop(frontier, esrc, edst, n, edge_chunk, m_valid)
         new = nxt * (1 - reached)                          # newly reached only
         dist = jnp.where(new.astype(bool), jnp.int8(hop), dist)
         frontier = new.at[n].set(0)

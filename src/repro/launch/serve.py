@@ -229,8 +229,13 @@ class StreamingServer:
         # earlier micro-batch still resolves to the right queries
         cids = self.sched.submit([[qids[li] for li in cl] for cl in clusters])
 
+        # n_compiles / n_retraces stay 0 unless the engine runs with
+        # EngineConfig.log_compiles — then each batch_log entry shows
+        # whether this micro-batch hit warm XLA compiles (retraces == 0)
+        # or paid a trace (e.g. after a shape-bucket crossing)
         agg = {"n_psi_nodes": 0, "n_materialized": 0,
-               "n_cache_hits": 0, "n_cache_misses": 0}
+               "n_cache_hits": 0, "n_cache_misses": 0,
+               "n_compiles": 0, "n_retraces": 0}
         open_cids = set(cids)
         while open_cids:
             progressed = False
@@ -273,6 +278,9 @@ class StreamingServer:
             "delta_cache_kept": next((d["cache_kept"] for d in
                                       reversed(deltas) if "cache_kept" in d),
                                      0),
+            # retraces paid inside apply_delta itself (0 for in-bucket
+            # churn; nonzero only when a delta crossed a shape bucket)
+            "delta_retraces": sum(d.get("n_retraces", 0) for d in deltas),
             **agg,
             **({"cache": self.engine.cache.info()}
                if self.engine.cache is not None else {}),

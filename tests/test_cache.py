@@ -244,3 +244,63 @@ class TestStreaming:
         merged = cluster_queries(mu, gamma=0.05,
                                  bias=np.array([[0, .1], [.1, 0]]))
         assert merged == [[0, 1]]
+
+
+class TestShapeAgnosticEntries:
+    """Stale-shape hazard (pow2 edge buckets): cache keys/entries must not
+    capture the device graph's padded shapes, so an entry produced under
+    one edge bucket is still an exact hit after the bucket grows."""
+
+    def test_entry_exact_hit_across_edge_bucket_growth(self):
+        from repro.core import GraphDelta
+        from repro.core.oracle import bfs_dist_from
+
+        # ring-of-chords graph: m = 1200 sits under the 2048 bucket, and
+        # everything beyond the query balls is a huge hop-cold pool
+        n = 600
+        src = np.repeat(np.arange(n, dtype=np.int64), 2)
+        dst = (src + np.tile(np.array([1, 2], np.int64), n)) % n
+        g = Graph.from_edges(n, src, dst)
+        qs = [(0, 3, 3), (10, 13, 3), (20, 23, 3), (5, 8, 3)]
+        eng = BatchPathEngine(g, EngineConfig(min_cap=64,
+                                              cache_bytes=32 << 20,
+                                              delta_max_sources=4096))
+        eng.run(qs)
+        n_entries = len(eng.cache)
+        assert n_entries > 0
+
+        # grow the edge bucket with inserts far outside every query ball
+        # (and every prune radius), so hop-scoped invalidation keeps all
+        # entries while m crosses its pow2 boundary
+        hot = np.zeros(g.n, bool)
+        for s, t, k in qs:
+            hot |= bfs_dist_from(g, s, 2 * k) <= 2 * k
+            hot |= bfs_dist_from(g, t, 2 * k, reverse=True) <= 2 * k
+        cold = np.flatnonzero(~hot)
+        need = eng.dg.m_cap - g.m + 1
+        assert cold.size * (cold.size - 1) // 2 >= 2 * need
+        have = set()
+        esrc = np.repeat(np.arange(g.n), np.diff(g.indptr))
+        have.update(zip(esrc.tolist(), g.indices.tolist()))
+        rng = np.random.default_rng(32)
+        adds = []
+        while len(adds) < need:
+            u, v = (int(x) for x in rng.choice(cold, 2, replace=False))
+            if u != v and (u, v) not in have:
+                adds.append((u, v))
+                have.add((u, v))
+        m_cap_before = eng.dg.m_cap
+        rep = eng.apply_delta(GraphDelta.from_pairs(add=adds))
+        assert eng.dg.m_cap > m_cap_before           # bucket grew
+        assert rep["cache_mode"] == "delta"
+        assert rep["cache_kept"] == n_entries and rep["cache_evicted"] == 0
+
+        # every entry must be an exact hit under the grown bucket, and the
+        # answers must still be oracle-exact on the mutated graph
+        r = eng.run(qs)
+        assert r.stats["n_materialized"] == 0, r.stats
+        assert r.stats["n_cache_misses"] == 0
+        assert r.stats["n_cache_hits"] > 0
+        for qi, (s, t, k) in enumerate(qs):
+            truth = path_set(enumerate_paths_bruteforce(eng.g, s, t, k))
+            assert path_set(r[qi].paths) == truth, f"q{qi}"

@@ -167,12 +167,17 @@ class TestDeviceGraphUpdate:
         assert incremental
         g2 = applied.graph
         assert dg2.ell_cap == dg.ell_cap and dg2.r_ell_cap == dg.r_ell_cap
+        # a rewire keeps m constant: the edge bucket (and with it every
+        # kernel shape) must be preserved, valid prefix exact, sentinel
+        # (n, n) edges beyond it
+        assert dg2.m_cap == dg.m_cap and dg2.m == g2.m
         esrc, edst = g2.edges_by_dst
         r_esrc, r_edst = g2.r_edges_by_dst
-        np.testing.assert_array_equal(np.asarray(dg2.esrc), esrc)
-        np.testing.assert_array_equal(np.asarray(dg2.edst), edst)
-        np.testing.assert_array_equal(np.asarray(dg2.r_esrc), r_esrc)
-        np.testing.assert_array_equal(np.asarray(dg2.r_edst), r_edst)
+        for got, want in ((dg2.esrc, esrc), (dg2.edst, edst),
+                          (dg2.r_esrc, r_esrc), (dg2.r_edst, r_edst)):
+            got = np.asarray(got)
+            np.testing.assert_array_equal(got[:g2.m], want)
+            assert np.all(got[g2.m:] == g2.n)
         ell = g2.ell(cap=dg2.ell_cap)
         rell = g2.reverse().ell(cap=dg2.r_ell_cap)
         np.testing.assert_array_equal(np.asarray(dg2.ell_idx), ell.idx)
@@ -190,6 +195,28 @@ class TestDeviceGraphUpdate:
         ref = DeviceGraph.build(applied.graph)
         np.testing.assert_array_equal(np.asarray(dg2.ell_idx),
                                       np.asarray(ref.ell_idx))
+
+    def test_cap_overflow_rebuild_never_shrinks_buckets(self):
+        """The ELL-overflow fallback must keep every shape bucket monotone
+        (edge cap and both ELL caps): an overflow after deletion-heavy
+        churn re-bucketing smaller would re-thrash the next insert wave."""
+        g = Graph.from_edges(6, [0, 1, 2], [1, 2, 3])
+        # simulate previously grown buckets: a larger edge pad + ELL caps
+        dg = DeviceGraph.build(g, edge_cap=16)
+        dg = DeviceGraph.build(g, edge_cap=16,
+                               min_ell_caps=(dg.ell_cap * 4, dg.r_ell_cap))
+        applied = apply_delta(g, GraphDelta.from_pairs(
+            add=[(5, v) for v in range(5)]))      # out-row 5: deg 5 > cap
+        dg2, incremental = update_device_graph(dg, applied)
+        assert not incremental
+        assert dg2.m_cap >= dg.m_cap              # edge bucket kept
+        assert dg2.ell_cap >= dg.ell_cap          # fwd ELL bucket kept
+        assert dg2.r_ell_cap >= dg.r_ell_cap
+        # and the rebuilt views are still a correct padded graph
+        g2 = applied.graph
+        got = np.asarray(dg2.esrc)
+        np.testing.assert_array_equal(got[:g2.m], g2.edges_by_dst[0])
+        assert np.all(got[g2.m:] == g2.n)
 
     def test_frontier_dists_agree_on_old_and_new_graph(self):
         """The invalidation invariant: both endpoints of every changed edge

@@ -89,10 +89,12 @@ from jax.sharding import PartitionSpec as P, NamedSharding
 g = generators.erdos(512, 4.0, seed=0)
 dg = DeviceGraph.build(g)
 srcs = jnp.asarray(np.arange(16, dtype=np.int32))
-# pad the edge list to a device multiple by repeating the last edge
-# (duplicate edges are no-ops in the boolean BFS semiring)
-m8 = -(-dg.m // 8) * 8
-pad = m8 - dg.m
+# pad the (already pow2 sentinel-padded) edge list to a device multiple
+# by repeating the last entry (sentinel or duplicate edge: both are
+# no-ops in the boolean BFS semiring)
+m_cap = int(dg.esrc.shape[0])
+m8 = -(-m_cap // 8) * 8
+pad = m8 - m_cap
 esrc_p = jnp.concatenate([dg.esrc, jnp.repeat(dg.esrc[-1:], pad)])
 edst_p = jnp.concatenate([dg.edst, jnp.repeat(dg.edst[-1:], pad)])
 ref = np.asarray(msbfs_dist(esrc_p, edst_p, srcs, n=g.n, k_max=4))

@@ -66,6 +66,30 @@ class TestGraph:
         assert dg.n == g.n and dg.m == g.m
         assert dg.ell_idx.shape[0] == g.n
 
+    def test_device_graph_pow2_buckets(self):
+        from repro.core.graph import pow2_ceil
+        g = random_graph(20, 60, 2)
+        dg = DeviceGraph.build(g)
+        # edge lists sentinel-padded to the pow2 bucket, ELL caps bucketed
+        assert dg.m_cap == pow2_ceil(g.m) and dg.m_valid == g.m
+        for esrc, edst in ((dg.esrc, dg.edst), (dg.r_esrc, dg.r_edst)):
+            assert esrc.shape == edst.shape == (dg.m_cap,)
+            assert np.all(np.asarray(esrc)[g.m:] == g.n)
+            assert np.all(np.asarray(edst)[g.m:] == g.n)
+            assert np.all(np.diff(np.asarray(edst)) >= 0)  # stays dst-sorted
+        assert dg.ell_cap == pow2_ceil(int(g.out_degree().max()))
+        assert dg.r_ell_cap == pow2_ceil(int(g.in_degree().max()))
+        # pad=False restores the exact legacy shapes
+        dgx = DeviceGraph.build(g, pad=False)
+        assert dgx.m_cap == g.m
+        assert dgx.ell_cap == int(g.out_degree().max())
+
+    def test_device_graph_empty_graph_pads_to_one_sentinel(self):
+        g = Graph.from_edges(4, [], [])
+        dg = DeviceGraph.build(g)
+        assert dg.m == 0 and dg.m_cap == 1
+        assert int(dg.esrc[0]) == g.n and int(dg.edst[0]) == g.n
+
 
 class TestGenerators:
     @pytest.mark.parametrize("gen,kw", [

@@ -1,0 +1,174 @@
+"""Recompile regression harness (core.compilelog over the serving path).
+
+The batch advantage dies at the compiler if shapes drift: one stray
+``(m,)`` change retraces every edge kernel on the next batch. These tests
+pin the shape-stability contract of the sentinel-padded pow2 buckets:
+
+  (a) repeated batches of *different* queries on the same graph compile
+      nothing after the first batch;
+  (b) an insert-heavy churn loop of 20 ``apply_delta`` rounds inside one
+      pow2 edge bucket compiles nothing — while staying oracle-exact and
+      bit-identical to unpadded execution;
+  (c) a bucket-crossing delta retraces each kernel at most as often as
+      its cold start did (once per shape it uses), then the loop is
+      immediately warm again.
+
+The workload is a circulant graph (every vertex sees the same local
+structure), so rotated queries are isomorphic and any compile observed
+in a warm window is a genuine shape leak, not workload noise. Churn
+edges live in the hop-cold region (outside every query ball and prune
+radius), so the cross-batch cache stays fully warm and retraces cannot
+hide behind rematerialization.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (BatchPathEngine, EngineConfig, GraphDelta,
+                        generators)
+from repro.core.graph import DeviceGraph, Graph
+from repro.core.oracle import enumerate_paths_bruteforce, path_set
+
+OFFSETS = (1, 2, 3)
+N = 64
+
+
+def circulant(n=N, offsets=OFFSETS) -> Graph:
+    """Vertex-transitive graph: v -> v + d (mod n) for each offset d."""
+    src = np.repeat(np.arange(n, dtype=np.int64), len(offsets))
+    dst = (src + np.tile(np.array(offsets, np.int64), n)) % n
+    return Graph.from_edges(n, src, dst)
+
+
+def _engine(**cfg) -> BatchPathEngine:
+    base = dict(min_cap=256, cache_bytes=8 << 20, log_compiles=True)
+    base.update(cfg)
+    return BatchPathEngine(circulant(), EngineConfig(**base))
+
+
+def _assert_oracle_exact(engine, report, queries):
+    for qi, (s, t, k) in enumerate(queries):
+        truth = path_set(enumerate_paths_bruteforce(engine.g, s, t, k))
+        assert path_set(report[qi].paths) == truth, f"q{qi}"
+
+
+# queries whose balls (fwd [s, s+3k], bwd [t-3k, t]) avoid [20, 52): the
+# churn pool below. k=3 with sources 0 and 8 keeps the hot region inside
+# {58..63, 0..17}.
+CHURN_QS = [(0, 3, 3), (8, 11, 3)]
+
+
+def _churn_delta(i: int) -> GraphDelta:
+    """Round i inserts the single cold-region edge (20+i, 27+i): absent in
+    the circulant (offset 7), endpoints > 3 hops from every query ball, and
+    each endpoint's degree grows to exactly the pow2 ELL cap (4)."""
+    return GraphDelta.from_pairs(add=[(20 + i, 27 + i)])
+
+
+class TestRepeatedBatches:
+    def test_different_query_batches_compile_nothing_after_first(self):
+        eng = _engine()
+        assert eng.dg.m_cap == 256 and eng.g.m == 192   # headroom by design
+
+        def batch(i):
+            return [(8 * j + i, (8 * j + i + 3) % N, 3) for j in range(6)]
+
+        r0 = eng.run(batch(0))
+        assert r0.stats["n_compiles"] > 0               # cold start
+        for i in (1, 2, 3):
+            r = eng.run(batch(i))
+            assert r.stats["n_compiles"] == 0, \
+                (i, r.stats["compiled_kernels"])
+            assert r.stats["n_retraces"] == 0
+            _assert_oracle_exact(eng, r, batch(i))
+
+
+class TestInBucketChurn:
+    @pytest.mark.parametrize("backend", ["host", "msbfs"])
+    def test_20_delta_rounds_zero_retraces(self, backend):
+        eng = _engine(delta_backend=backend)
+        cl = eng.compile_log
+        eng.run(CHURN_QS)
+        # warmup round: first delta compiles the (shape-stable) delta-path
+        # kernels — ELL row scatters, the msbfs invalidation sweep
+        rep0 = eng.apply_delta(_churn_delta(0))
+        assert rep0["device_update"] == "incremental"
+        eng.run(CHURN_QS)
+
+        snap = cl.snapshot()
+        for i in range(1, 21):                          # 20 churn rounds
+            rep = eng.apply_delta(_churn_delta(i))
+            assert rep["device_update"] == "incremental"
+            assert rep["cache_evicted"] == 0            # hop-cold churn
+            assert rep["n_compiles"] == 0, (i, rep["compiled_kernels"])
+            r = eng.run(CHURN_QS)
+            assert r.stats["n_compiles"] == 0, \
+                (i, r.stats["compiled_kernels"])
+            assert eng.dg.m_cap == 256 and eng.dg.m == 192 + i + 1
+            _assert_oracle_exact(eng, r, CHURN_QS)
+        assert cl.compiles_since(snap) == 0             # the whole window
+
+        # parity against unpadded execution on the churned graph: sentinel
+        # padding must not change a single enumerated path
+        exact = BatchPathEngine(eng.g, EngineConfig(min_cap=256))
+        exact.dg = DeviceGraph.build(eng.g, pad=False)
+        r_pad = eng.run(CHURN_QS)
+        r_exact = exact.run(CHURN_QS)
+        for qi in range(len(CHURN_QS)):
+            assert path_set(r_pad[qi].paths) == path_set(r_exact[qi].paths)
+
+
+class TestBucketCrossing:
+    def test_crossing_retraces_at_most_cold_counts_then_warm(self):
+        eng = _engine()
+        cl = eng.compile_log
+        eng.run(CHURN_QS)
+        eng.apply_delta(_churn_delta(0))                # warm the delta path
+        eng.run(CHURN_QS)
+
+        # crossing delta: cold-region inserts pushing m past the 256 bucket
+        adds = [(u, (u + d) % N) for d in (5, 6, 7) for u in range(20, 45)]
+        # cumulative per-kernel history: one compile per (kernel, shape)
+        # ever used — jit caches (and the recorder) are process-global, so
+        # this is the tightest sound "once per kernel per shape" bound
+        warm_snap = cl.snapshot()
+        rep = eng.apply_delta(GraphDelta.from_pairs(add=adds))
+        assert eng.dg.m_cap == 512                      # next pow2 bucket
+        r = eng.run(CHURN_QS)
+        _assert_oracle_exact(eng, r, CHURN_QS)
+        crossed = cl.since(warm_snap)
+        assert crossed, "bucket crossing must retrace the edge kernels"
+        assert "msbfs_dist" in crossed                  # the (m,) consumers
+        for kernel, count in crossed.items():
+            assert count <= warm_snap.get(kernel, 0), (
+                f"{kernel}: crossing compiled {count}x vs "
+                f"{warm_snap.get(kernel, 0)}x before — more than once per "
+                f"shape it uses")
+
+        # one warm-up round after the crossing (the incremental ELL scatter
+        # meets the rebuilt, larger ELL cap here for the first time) ...
+        eng.apply_delta(GraphDelta.from_pairs(add=[(30, 46)]))
+        eng.run(CHURN_QS)
+        # ... and the loop is fully warm again inside the new bucket
+        rep = eng.apply_delta(GraphDelta.from_pairs(add=[(31, 47)]))
+        assert rep["n_compiles"] == 0, rep["compiled_kernels"]
+        r = eng.run(CHURN_QS)
+        assert r.stats["n_compiles"] == 0, r.stats["compiled_kernels"]
+        _assert_oracle_exact(eng, r, CHURN_QS)
+
+
+class TestRecorder:
+    def test_snapshot_diff_and_retrace_accounting(self):
+        from repro.core import compilelog
+        cl = compilelog.enable()
+        assert compilelog.active() is cl
+        snap = {"a": 2, "b": 1}
+        cl.counts.update({"a": 3, "b": 1, "c": 2})
+        # since(): positive diffs only; retraces: only already-known names
+        before = dict(cl.counts)
+        diff = {k: v - snap.get(k, 0)
+                for k, v in before.items() if v - snap.get(k, 0) > 0}
+        assert cl.since(snap) == diff
+        assert cl.retraces_since(snap) == diff.get("a", 0)
+        stats = cl.annotate({}, snap)
+        assert stats["n_compiles"] == sum(diff.values())
+        assert stats["n_retraces"] == diff.get("a", 0)
