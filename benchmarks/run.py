@@ -25,6 +25,7 @@ ALL = {
     "exp3": exp3_decomposition.main,
     "exp4": exp4_gamma.main,
     "exp5": exp5_scalability.main,
+    "exp5s": exp5_scalability.sharded_main,
     "exp6": exp6_ksp.main,
     "exp7": exp7_path_counts.main,
     "exp8": exp8_cross_batch.main,

@@ -8,12 +8,13 @@ from .engine import BatchPathEngine, EngineConfig, EngineOverflow, BatchResult
 from .session import PathSession
 from .index import build_index, QueryIndex
 from .compilelog import CompileLog
-from . import compilelog, generators, oracle
+from .distributed import ShardedExecutor
+from . import compilelog, distributed, generators, oracle
 
 __all__ = ["Graph", "DeviceGraph", "GraphDelta", "AppliedDelta",
            "BatchPathEngine", "EngineConfig",
            "EngineOverflow", "BatchResult", "SharedPathCache",
            "PathQuery", "QueryResult", "BatchReport", "Planner", "Output",
-           "QueryLike", "PathSession", "CompileLog",
-           "build_index", "QueryIndex", "compilelog", "generators",
-           "oracle"]
+           "QueryLike", "PathSession", "CompileLog", "ShardedExecutor",
+           "build_index", "QueryIndex", "compilelog", "distributed",
+           "generators", "oracle"]

@@ -15,7 +15,8 @@ __all__ = ["cluster_queries"]
 
 
 def cluster_queries(mu: np.ndarray, gamma: float,
-                    bias: Optional[np.ndarray] = None) -> list[list[int]]:
+                    bias: Optional[np.ndarray] = None,
+                    min_clusters: int = 1) -> list[list[int]]:
     """Cluster query ids 0..Q-1 on the μ matrix; stop when max δ <= γ.
 
     bias : optional (Q, Q) symmetric additive bonus applied to μ before
@@ -23,6 +24,12 @@ def cluster_queries(mu: np.ndarray, gamma: float,
            clusters whose shared HC-s path results are already warm in the
            cross-batch cache (cache-aware admission). The biased similarity
            is clipped back to [0, 1] so γ keeps its meaning.
+
+    min_clusters : stop merging once this many clusters remain (before the
+           γ threshold would). Sharded engines pass their replica count
+           (``EngineConfig.balance_clusters``) so a highly similar batch
+           cannot collapse below one data-parallel work unit per device;
+           the default 1 keeps the paper's pure γ-threshold stop.
 
     Returns a partition (list of clusters, each a list of query indices).
     """
@@ -33,7 +40,7 @@ def cluster_queries(mu: np.ndarray, gamma: float,
         delta = np.clip(delta + np.asarray(bias, np.float64), 0.0, 1.0)
     np.fill_diagonal(delta, -np.inf)
     alive = list(range(Q))
-    while len(alive) > 1:
+    while len(alive) > max(int(min_clusters), 1):
         sub = delta[np.ix_(alive, alive)]
         flat = np.argmax(sub)
         i_, j_ = divmod(flat, len(alive))

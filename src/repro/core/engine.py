@@ -25,7 +25,7 @@ from typing import Callable, Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
-from . import compilelog
+from . import compilelog, distributed
 from .cache import SharedPathCache
 from .delta import (AppliedDelta, GraphDelta, apply_delta as _merge_delta,
                     host_set_dist, pow2_ceil as _pow2, update_device_graph)
@@ -76,6 +76,14 @@ class EngineConfig:
     # (for accelerator-resident graphs where m is device-scale)
     log_compiles: bool = False      # compile telemetry: per-kernel retrace
     # counts in run()/apply_delta() stats (core.compilelog recorder)
+    mesh: Optional[object] = None   # jax.sharding.Mesh to shard/place on;
+    # None + n_devices -> a 1-D "cells" mesh over the first N local devices
+    n_devices: Optional[int] = None  # mesh size knob (1 = identity mesh;
+    # None/0 = plain single-device). See core.distributed.
+    balance_clusters: bool = False  # sharded runs stop cluster merging at
+    # n_replicas clusters so the mesh never idles on an over-merged batch
+    # (changes the clustering, hence result row order — off by default so
+    # sharded == single-device stays bit-identical)
 
 
 @dataclasses.dataclass
@@ -114,8 +122,20 @@ class BatchPathEngine:
                  cache: Optional[SharedPathCache] = None):
         self.g = graph
         self.cfg = config or EngineConfig()
-        self.dg = DeviceGraph.build(graph)
+        mesh = distributed.resolve_mesh(self.cfg.mesh, self.cfg.n_devices)
+        if mesh is None:
+            self.dg = DeviceGraph.build(graph)
+        else:
+            # device-count-aligned edge bucket: sharded and single-device
+            # shapes coincide for pow2 device counts, so both stay warm
+            n_dev = int(np.prod(list(mesh.shape.values())))
+            self.dg = DeviceGraph.build(
+                graph, edge_cap=distributed.edge_bucket_for(graph.m, n_dev))
         self._host_dists: Optional[tuple] = None   # (index, (dist_s, dist_t))
+        # plan -> place -> gather layer; identity on a single device (the
+        # executor IS the cluster-execution loop for every engine)
+        self.executor: Optional[distributed.ShardedExecutor] = \
+            distributed.ShardedExecutor(self, mesh)
         if cache is None and self.cfg.cache_bytes > 0:
             cache = SharedPathCache(self.cfg.cache_bytes)
         self.cache = cache
@@ -131,10 +151,19 @@ class BatchPathEngine:
         incremental edge churn prefer :meth:`apply_delta`, which keeps the
         warm state whose hop-locality a small delta cannot reach."""
         self.g = graph
-        self.dg = DeviceGraph.build(graph)
+        if self.executor is not None and self.executor.mesh is not None:
+            n_dev = self.executor.n_replicas
+            self.dg = DeviceGraph.build(
+                graph, edge_cap=distributed.edge_bucket_for(graph.m, n_dev))
+        else:
+            self.dg = DeviceGraph.build(graph)
         self._host_dists = None
-        if self.cache is not None:
-            self.cache.invalidate()
+        # replica caches invalidate BEFORE the replicas are dropped so a
+        # swap bumps every epoch in lockstep with the primary
+        for cache in self._all_caches():
+            cache.invalidate()
+        if self.executor is not None:
+            self.executor.reset()
 
     def apply_delta(self, delta: GraphDelta) -> dict:
         """Apply an incremental edge delta; returns an application report.
@@ -181,30 +210,58 @@ class BatchPathEngine:
         report["device_update"] = "incremental" if incremental else "rebuild"
         self.g = applied.graph
         self._host_dists = None
+        if self.executor is not None:
+            # replica device views patch in lockstep; their caches were
+            # already invalidated above with the same distance sweep
+            self.executor.propagate_delta(applied)
         _sync_device_graph(self.dg)   # timer measures completed work
         report["t_apply_s"] = time.perf_counter() - t0
         return report
 
-    def _invalidate_for(self, applied: AppliedDelta) -> dict:
-        """Cache invalidation for one merged delta (cache must exist)."""
-        cache = self.cache
-        if len(cache) == 0:
-            info = cache.invalidate_delta(applied.touched,
-                                          {"to": np.empty(0, np.int8),
-                                           "from": np.empty(0, np.int8)})
-            return {"cache_mode": "delta", "cache_evicted": 0,
-                    "cache_kept": 0, "cache_epoch": info["epoch"]}
-        if applied.touched.size > self.cfg.delta_max_sources:
-            dropped = len(cache)
-            cache.invalidate()   # frontier too wide: hop-scoping won't pay
-            return {"cache_mode": "full", "cache_evicted": dropped,
-                    "cache_kept": 0, "cache_epoch": cache.epoch}
-        info = cache.invalidate_delta(applied.touched,
-                                      self._delta_dists(applied))
-        return {"cache_mode": "delta", "cache_evicted": info["evicted"],
-                "cache_kept": info["kept"], "cache_epoch": info["epoch"]}
+    def _all_caches(self) -> list[SharedPathCache]:
+        """Primary cache + every materialized replica's cache. All of
+        them receive each invalidation event (same dists, same order), so
+        their epochs advance in lockstep; replicas created later sync the
+        epoch at birth (see ``distributed.ShardedExecutor._clone``)."""
+        caches = [] if self.cache is None else [self.cache]
+        if self.executor is not None:
+            caches += self.executor.replica_caches()
+        return caches
 
-    def _delta_dists(self, applied: AppliedDelta) -> dict:
+    def _invalidate_for(self, applied: AppliedDelta) -> dict:
+        """Cache invalidation for one merged delta (primary cache must
+        exist; replica caches, when materialized, invalidate identically)."""
+        caches = self._all_caches()
+        if all(len(c) == 0 for c in caches):
+            empty = {"to": np.empty(0, np.int8),
+                     "from": np.empty(0, np.int8)}
+            info = {}
+            for c in caches:
+                info = c.invalidate_delta(applied.touched, empty)
+            return {"cache_mode": "delta", "cache_evicted": 0,
+                    "cache_kept": 0, "cache_epoch": info["epoch"],
+                    "cache_epochs": [c.epoch for c in caches]}
+        if applied.touched.size > self.cfg.delta_max_sources:
+            dropped = sum(len(c) for c in caches)   # primary + replicas
+            for c in caches:
+                c.invalidate()   # frontier too wide: hop-scoping won't pay
+            return {"cache_mode": "full", "cache_evicted": dropped,
+                    "cache_kept": 0, "cache_epoch": self.cache.epoch,
+                    "cache_epochs": [c.epoch for c in caches]}
+        # one distance sweep prices the damage for every cache: the
+        # radius must cover the widest live entry anywhere in the fleet
+        k_max = max(max(c.max_radius() for c in caches), 1)
+        dists = self._delta_dists(applied, k_max)
+        info = {}
+        for c in caches:
+            got = c.invalidate_delta(applied.touched, dists)
+            if c is self.cache:
+                info = got
+        return {"cache_mode": "delta", "cache_evicted": info["evicted"],
+                "cache_kept": info["kept"], "cache_epoch": info["epoch"],
+                "cache_epochs": [c.epoch for c in caches]}
+
+    def _delta_dists(self, applied: AppliedDelta, k_max: int) -> dict:
         """Min hop distances to/from the touched frontier.
 
         Both endpoints of every changed edge are seeds, so these distances
@@ -213,9 +270,9 @@ class BatchPathEngine:
         means the still-resident old device edge lists (``self.dg`` is
         patched only after invalidation), no transfer or merge needed.
         Backend "host" (default) walks only the touched balls' edges over
-        the CSR; "msbfs" is for accelerator-resident graphs.
+        the CSR; "msbfs" is for accelerator-resident graphs. ``k_max`` is
+        the widest live radius across every cache (primary + replicas).
         """
-        k_max = max(self.cache.max_radius(), 1)
         if self.cfg.delta_backend == "host":
             return {"from": host_set_dist(self.g, applied, k_max,
                                           reverse=False),
@@ -232,11 +289,14 @@ class BatchPathEngine:
 
         # the still-resident old edge lists are already sentinel-padded to
         # their pow2 bucket (DeviceGraph.build / update_device_graph), so
-        # the sweep's traced shape is stable across deltas by construction
+        # the sweep's traced shape is stable across deltas by construction.
+        # _kernel_dg: on a sharded engine this sweep runs GSPMD over the
+        # mesh (the index view re-shards only after the patch).
+        kdg = self._kernel_dg()
         dists = {}
-        m_valid = edge_span(self.dg.m, self.cfg.edge_chunk, self.dg.m_cap)
-        for name, (esrc, edst) in (("from", (self.dg.esrc, self.dg.edst)),
-                                   ("to", (self.dg.r_esrc, self.dg.r_edst))):
+        m_valid = edge_span(kdg.m, self.cfg.edge_chunk, kdg.m_cap)
+        for name, (esrc, edst) in (("from", (kdg.esrc, kdg.edst)),
+                                   ("to", (kdg.r_esrc, kdg.r_edst))):
             d = msbfs_set_dist(esrc, edst, seed, n=self.g.n,
                                k_max=k_max, edge_chunk=self.cfg.edge_chunk,
                                m_valid=m_valid)
@@ -303,7 +363,7 @@ class BatchPathEngine:
         t0 = time.perf_counter()
         if planner is Planner.PATHENUM:
             return self._run_pathenum(qs, stats)
-        index = build_index(self.dg, [q.key for q in qs],
+        index = build_index(self._kernel_dg(), [q.key for q in qs],
                             self.cfg.edge_chunk)
         index.dist_s.block_until_ready()
         stats["t_build_index"] = time.perf_counter() - t0
@@ -351,7 +411,8 @@ class BatchPathEngine:
         t_idx = t_enum = 0.0
         for q in queries:
             t0 = time.perf_counter()
-            index = build_index(self.dg, [q.key], self.cfg.edge_chunk)
+            index = build_index(self._kernel_dg(), [q.key],
+                                self.cfg.edge_chunk)
             index.dist_s.block_until_ready()
             dt_idx = time.perf_counter() - t0
             t_idx += dt_idx
@@ -382,7 +443,11 @@ class BatchPathEngine:
         t0 = time.perf_counter()
         if clusters is None:
             mu = similarity_matrix(index, backend=self.cfg.backend)
-            clusters = cluster_queries(mu, self.cfg.gamma)
+            min_clusters = 1
+            if self.cfg.balance_clusters and self.executor is not None:
+                min_clusters = self.executor.n_replicas
+            clusters = cluster_queries(mu, self.cfg.gamma,
+                                       min_clusters=min_clusters)
             stats["mu_mean"] = float((mu.sum() - len(queries)) /
                                      max(len(queries) * (len(queries) - 1), 1))
         else:
@@ -393,71 +458,87 @@ class BatchPathEngine:
         stats["n_clusters"] = len(clusters)
 
         min_sb = 0 if self.cfg.paper_faithful_shares else self.cfg.min_shared_budget
-        results = {}
-        t_detect = t_enum = 0.0
-        n_shared_total = n_dedup_total = n_edges_total = 0
         for key in ("n_psi_nodes", "n_materialized",
-                    "n_cache_hits", "n_cache_misses"):
+                    "n_cache_hits", "n_cache_misses",
+                    "t_detect", "t_enumerate",
+                    "n_shared", "n_dedup", "n_share_edges"):
             stats[key] = 0
-        for cluster in clusters:
-            t0 = time.perf_counter()
-            halves_f = {}
-            halves_b = {}
-            ends_f = {}
-            ends_b = {}
-            for qi in cluster:
-                s, t, k = queries[qi]
-                a, b = self._split(qi, index, plus)
-                halves_f[qi] = (s, a)
-                halves_b[qi] = (t, b)
-                ends_f[qi] = (t, k)
-                ends_b[qi] = (s, k)
-            hop_f = self._hop_ok(index, cluster, forward=True)
-            hop_b = self._hop_ok(index, cluster, forward=False)
-            plan_f = detect_common_queries(self.g, cluster, halves_f, hop_f,
-                                           reverse=False, min_shared_budget=min_sb,
-                                           endpoints=ends_f)
-            plan_b = detect_common_queries(self.g, cluster, halves_b, hop_b,
-                                           reverse=True, min_shared_budget=min_sb,
-                                           endpoints=ends_b)
-            n_shared_total += plan_f.n_shared + plan_b.n_shared
-            # deduped half-queries: halves mapped onto an existing node,
-            # counted per direction (identical queries collapse entirely)
-            n_dedup_total += len(cluster) - len(set(plan_f.half_of_query.values()))
-            n_dedup_total += len(cluster) - len(set(plan_b.half_of_query.values()))
-            n_edges_total += sum(len(n.in_edges) for n in plan_f.nodes)
-            n_edges_total += sum(len(n.in_edges) for n in plan_b.nodes)
-            t_detect += time.perf_counter() - t0
-
-            t0 = time.perf_counter()
-            cache_f = self._run_plan(plan_f, index, forward=True, stats=stats)
-            cache_b = self._run_plan(plan_b, index, forward=False, stats=stats)
-            # identical (halves, k, output, limit) -> identical payloads
-            assembled: dict = {}
-            for qi in cluster:
-                q = queries[qi]
-                tq = time.perf_counter()
-                a = halves_f[qi][1]
-                b = halves_b[qi][1]
-                fid = plan_f.half_of_query[qi]
-                bid = plan_b.half_of_query[qi]
-                key = (fid, bid, a, b, q.k, q.t, q.output, q.limit)
-                if key not in assembled:
-                    fl = cache_f[fid]
-                    assembled[key] = self._payload(
-                        q, fl, a, lambda bid=bid: cache_b[bid], b, stats)
-                results[qi] = self._wrap(q, assembled[key])
-                results[qi].time_s = time.perf_counter() - tq
-            t_enum += time.perf_counter() - t0
-        stats["t_detect"] = t_detect
-        stats["t_enumerate"] = t_enum
-        stats["n_shared"] = n_shared_total
-        stats["n_dedup"] = n_dedup_total
-        stats["n_share_edges"] = n_edges_total
+        # plan -> place -> gather: the executor runs every cluster —
+        # inline here on one device, fanned across per-device replicas on
+        # a mesh (distributed.ShardedExecutor.run_clusters)
+        results = self.executor.run_clusters(queries, index, plus, min_sb,
+                                             clusters, stats)
         return BatchReport(queries=tuple(queries),
                            results=tuple(results[qi]
                                          for qi in range(len(queries))),
                            stats=stats)
+
+    def _cluster_work(self, queries, index: QueryIndex, plus: bool,
+                      min_sb: int, cluster: list[int]):
+        """One sharing cluster end-to-end: detect → plan execution →
+        per-query ⊕ assembly. Returns ``({qi: QueryResult}, cstats)``.
+
+        This is the executor's unit of placement: it touches only
+        replica-local state (``self.dg``, ``self.cache``) plus read-only
+        shared inputs (host graph, index host-dist memo), so distinct
+        clusters run concurrently on distinct replicas.
+        """
+        cstats = {"n_psi_nodes": 0, "n_materialized": 0,
+                  "n_cache_hits": 0, "n_cache_misses": 0,
+                  "n_rows_assembled": 0}
+        t0 = time.perf_counter()
+        halves_f = {}
+        halves_b = {}
+        ends_f = {}
+        ends_b = {}
+        for qi in cluster:
+            s, t, k = queries[qi]
+            a, b = self._split(qi, index, plus)
+            halves_f[qi] = (s, a)
+            halves_b[qi] = (t, b)
+            ends_f[qi] = (t, k)
+            ends_b[qi] = (s, k)
+        hop_f = self._hop_ok(index, cluster, forward=True)
+        hop_b = self._hop_ok(index, cluster, forward=False)
+        plan_f = detect_common_queries(self.g, cluster, halves_f, hop_f,
+                                       reverse=False, min_shared_budget=min_sb,
+                                       endpoints=ends_f)
+        plan_b = detect_common_queries(self.g, cluster, halves_b, hop_b,
+                                       reverse=True, min_shared_budget=min_sb,
+                                       endpoints=ends_b)
+        cstats["n_shared"] = plan_f.n_shared + plan_b.n_shared
+        # deduped half-queries: halves mapped onto an existing node,
+        # counted per direction (identical queries collapse entirely)
+        cstats["n_dedup"] = (
+            len(cluster) - len(set(plan_f.half_of_query.values()))
+            + len(cluster) - len(set(plan_b.half_of_query.values())))
+        cstats["n_share_edges"] = (
+            sum(len(n.in_edges) for n in plan_f.nodes)
+            + sum(len(n.in_edges) for n in plan_b.nodes))
+        cstats["t_detect"] = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        cache_f = self._run_plan(plan_f, index, forward=True, stats=cstats)
+        cache_b = self._run_plan(plan_b, index, forward=False, stats=cstats)
+        # identical (halves, k, output, limit) -> identical payloads
+        assembled: dict = {}
+        results: dict[int, QueryResult] = {}
+        for qi in cluster:
+            q = queries[qi]
+            tq = time.perf_counter()
+            a = halves_f[qi][1]
+            b = halves_b[qi][1]
+            fid = plan_f.half_of_query[qi]
+            bid = plan_b.half_of_query[qi]
+            key = (fid, bid, a, b, q.k, q.t, q.output, q.limit)
+            if key not in assembled:
+                fl = cache_f[fid]
+                assembled[key] = self._payload(
+                    q, fl, a, lambda bid=bid: cache_b[bid], b, cstats)
+            results[qi] = self._wrap(q, assembled[key])
+            results[qi].time_s = time.perf_counter() - tq
+        cstats["t_enumerate"] = time.perf_counter() - t0
+        return results, cstats
 
     # ------------------------------------------------------------------
     # plan execution: materialize needed Ψ nodes in topological order,
@@ -737,13 +818,14 @@ class BatchPathEngine:
         # "+" variants: pick the split minimizing estimated search cost
         fs = self._dedicated_slack(index, qi, forward=True)
         bs = self._dedicated_slack(index, qi, forward=False)
-        mv = self._m_valid()
-        cf = np.asarray(walk_counts(self.dg.esrc, self.dg.edst, s, fs,
-                                    n=self.dg.n, budget=k - 1,
+        kdg = self._kernel_dg()
+        mv = self._m_valid(kdg)
+        cf = np.asarray(walk_counts(kdg.esrc, kdg.edst, s, fs,
+                                    n=kdg.n, budget=k - 1,
                                     edge_chunk=self.cfg.edge_chunk,
                                     m_valid=mv))
-        cb = np.asarray(walk_counts(self.dg.r_esrc, self.dg.r_edst, t, bs,
-                                    n=self.dg.n, budget=k - 1,
+        cb = np.asarray(walk_counts(kdg.r_esrc, kdg.r_edst, t, bs,
+                                    n=kdg.n, budget=k - 1,
                                     edge_chunk=self.cfg.edge_chunk,
                                     m_valid=mv))
         best, best_cost = a, None
@@ -771,26 +853,43 @@ class BatchPathEngine:
 
     def _hop_ok(self, index: QueryIndex, cluster, forward: bool) -> np.ndarray:
         k_max = max(index.queries[qi][2] for qi in cluster)
+        # host-dist memo instead of per-cluster device transfers: replica
+        # threads share the (read-only) memo, so no gather contention
+        ds, dt = self._dists_host(index)
         if forward:
-            cols = np.asarray(index.dist_t[:-1, index.tgt_col[list(cluster)]])
+            cols = dt[:-1, index.tgt_col[list(cluster)]]
         else:
-            cols = np.asarray(index.dist_s[:-1, index.src_col[list(cluster)]])
+            cols = ds[:-1, index.src_col[list(cluster)]]
         return (cols.min(axis=1) <= k_max)
 
-    def _m_valid(self) -> int:
+    def _kernel_dg(self) -> DeviceGraph:
+        """Edge lists the index/walk kernels sweep: the GSPMD-sharded
+        mesh view on a primary engine with an executor, the local device
+        view on replicas (``executor is None``) and plain engines. While
+        a cluster fan-out is in flight the primary (= replica 0) also
+        answers with its local view — a mesh-wide collective launched
+        from one replica thread would contend with every other replica's
+        per-device work."""
+        if self.executor is not None and not self.executor.in_fanout:
+            return self.executor.index_dg
+        return self.dg
+
+    def _m_valid(self, dg: Optional[DeviceGraph] = None) -> int:
         """Chunk-rounded valid-edge span of the (sentinel-padded) device
         edge lists — the static ``m_valid`` every edge kernel receives."""
-        return edge_span(self.dg.m, self.cfg.edge_chunk, self.dg.m_cap)
+        dg = self.dg if dg is None else dg
+        return edge_span(dg.m, self.cfg.edge_chunk, dg.m_cap)
 
     def _plan_caps(self, reverse: bool, source: int, budget: int, slack):
         if not self.cfg.plan_caps:
             return [self.cfg.min_cap] * (budget + 1)
-        esrc = self.dg.r_esrc if reverse else self.dg.esrc
-        edst = self.dg.r_edst if reverse else self.dg.edst
-        tot = np.asarray(walk_counts(esrc, edst, source, slack, n=self.dg.n,
+        kdg = self._kernel_dg()
+        esrc = kdg.r_esrc if reverse else kdg.esrc
+        edst = kdg.r_edst if reverse else kdg.edst
+        tot = np.asarray(walk_counts(esrc, edst, source, slack, n=kdg.n,
                                      budget=budget,
                                      edge_chunk=self.cfg.edge_chunk,
-                                     m_valid=self._m_valid()))
+                                     m_valid=self._m_valid(kdg)))
         caps = [_bucket(min(int(min(t, 2**31)), self.cfg.max_cap),
                         self.cfg.min_cap) for t in tot]
         return caps

@@ -28,9 +28,12 @@ from __future__ import annotations
 
 import dataclasses
 from functools import cached_property
-from typing import Optional
+from typing import Optional, TYPE_CHECKING
 
 import numpy as np
+
+if TYPE_CHECKING:   # the "jax.Array" annotations below; jax itself is
+    import jax      # imported lazily so host-only use never inits a device
 
 __all__ = ["Graph", "DeviceGraph", "EllView", "pow2_ceil", "pad_edge_list"]
 

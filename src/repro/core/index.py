@@ -128,8 +128,13 @@ def walk_counts(esrc: jax.Array, edst: jax.Array, source, slack: jax.Array,
         nxt = jnp.zeros((n,), jnp.float32)
         for lo in range(0, m_used, edge_chunk):
             hi = min(lo + edge_chunk, m)
-            msgs = c[esrc[lo:hi]]
-            nxt = nxt + jax.ops.segment_sum(msgs, edst[lo:hi], num_segments=n,
+            # whole-list sweeps skip the slice so sharded edge lists stay
+            # shard-local (see msbfs_hop); sums are integer-valued f32,
+            # exact below 2**24 regardless of partitioned reduce order
+            es, ed = (esrc, edst) if lo == 0 and hi == m \
+                else (esrc[lo:hi], edst[lo:hi])
+            msgs = c[es]
+            nxt = nxt + jax.ops.segment_sum(msgs, ed, num_segments=n,
                                             indices_are_sorted=True)
         nxt = nxt * (slack[:-1] >= lvl)
         c = jnp.concatenate([nxt, jnp.zeros((1,), jnp.float32)])

@@ -68,11 +68,16 @@ def msbfs_hop(frontier: jax.Array, esrc: jax.Array, edst: jax.Array,
     m = esrc.shape[0]
     m_used = m if m_valid is None else min(int(m_valid), m)
     nxt = jnp.zeros((n, S), dtype=jnp.int8)
-    # static chunking keeps the (Ec, S) gather bounded
+    # static chunking keeps the (Ec, S) gather bounded; a whole-list
+    # sweep (the common case — m fits one chunk) skips the slice ops
+    # entirely, so a GSPMD-sharded edge list is gathered shard-local
+    # instead of being resharded at a mid-shard slice boundary
     for lo in range(0, m_used, edge_chunk):
         hi = min(lo + edge_chunk, m)
-        msgs = frontier[esrc[lo:hi]]                      # (Ec, S) int8
-        part = jax.ops.segment_max(msgs, edst[lo:hi], num_segments=n,
+        es, ed = (esrc, edst) if lo == 0 and hi == m \
+            else (esrc[lo:hi], edst[lo:hi])
+        msgs = frontier[es]                               # (Ec, S) int8
+        part = jax.ops.segment_max(msgs, ed, num_segments=n,
                                    indices_are_sorted=True)
         nxt = jnp.maximum(nxt, part)
     return jnp.concatenate([nxt, jnp.zeros((1, S), jnp.int8)], axis=0)

@@ -28,6 +28,7 @@ on `repro.launch` at import time.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional, Sequence
 
 from .cache import SharedPathCache
@@ -47,6 +48,11 @@ class PathSession:
         to wrap — its config/cache are reused).
     config : engine configuration (ignored when wrapping an engine).
     planner : default execution strategy for :meth:`run`.
+    mesh / n_devices : sharded-execution knobs, overriding the matching
+        ``EngineConfig`` fields — a ``jax.sharding.Mesh`` (or a local
+        device count) the engine shards its index over and places
+        sharing clusters on. A mesh of size 1 is the identity; both are
+        ignored when wrapping an existing engine.
     n_groups / policy / gamma / warm_bias_eps : streaming-server knobs,
         applied when the first query is submitted.
     """
@@ -55,12 +61,16 @@ class PathSession:
                  config: Optional[EngineConfig] = None, *,
                  planner: Planner | str = Planner.BATCH,
                  cache: Optional[SharedPathCache] = None,
+                 mesh=None, n_devices: Optional[int] = None,
                  n_groups: int = 2, policy=None,
                  gamma: Optional[float] = None,
                  warm_bias_eps: float = 0.08):
         if isinstance(graph, BatchPathEngine):
             self.engine = graph
         else:
+            if mesh is not None or n_devices is not None:
+                config = dataclasses.replace(config or EngineConfig(),
+                                             mesh=mesh, n_devices=n_devices)
             self.engine = BatchPathEngine(graph, config, cache=cache)
         self.planner = Planner.coerce(planner)
         self._server = None

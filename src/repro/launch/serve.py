@@ -224,11 +224,18 @@ class StreamingServer:
         index = build_index(self.engine.dg, [q.key for q in queries])
         mu = similarity_matrix(index, backend=self.engine.cfg.backend)
         bias = warm_cluster_bias(self.engine, queries, self.warm_bias_eps)
-        clusters = cluster_queries(mu, self.gamma, bias=bias)
+        # balance_clusters must act HERE, not just inside engine.run —
+        # the engine keeps an explicitly passed clustering verbatim, so a
+        # similar-traffic micro-batch merged to one cluster would idle
+        # every replica but one
+        min_clusters = 1
+        executor = self.engine.executor
+        if self.engine.cfg.balance_clusters and executor is not None:
+            min_clusters = executor.n_replicas
+        clusters = cluster_queries(mu, self.gamma, bias=bias,
+                                   min_clusters=min_clusters)
         # scheduler items carry global qids so a requeued item from any
         # earlier micro-batch still resolves to the right queries
-        cids = self.sched.submit([[qids[li] for li in cl] for cl in clusters])
-
         # n_compiles / n_retraces stay 0 unless the engine runs with
         # EngineConfig.log_compiles — then each batch_log entry shows
         # whether this micro-batch hit warm XLA compiles (retraces == 0)
@@ -236,31 +243,49 @@ class StreamingServer:
         agg = {"n_psi_nodes": 0, "n_materialized": 0,
                "n_cache_hits": 0, "n_cache_misses": 0,
                "n_compiles": 0, "n_retraces": 0}
-        open_cids = set(cids)
-        while open_cids:
-            progressed = False
-            for grp in range(self.n_groups):
-                item = self.sched.next_for(grp)
-                if item is None:
-                    continue
-                progressed = True
-                sub = [self._query_of[qid] for qid in item.queries]
-                # the item IS one cluster — pass it through so the engine
-                # keeps our (cache-aware) grouping instead of re-clustering
-                r = self.engine.run(sub, planner=Planner.BATCH,
-                                    clusters=[list(range(len(sub)))])
-                for i, qid in enumerate(item.queries):
-                    # results may sit untaken indefinitely — offload so the
-                    # backlog holds compact host rows, not padded device
-                    # buffers (count/exists results hold no buffer at all)
-                    self.results[qid] = r[i].offload()
-                for key in agg:
-                    agg[key] += r.stats.get(key, 0)
-                self.sched.complete(item.cluster_id, True)
-                open_cids.discard(item.cluster_id)
-            if not progressed and not any(
-                    cid in self.sched.in_flight for cid in open_cids):
-                break   # nothing runnable (foreign in-flight work only)
+        per_device = None
+        executor = self.engine.executor
+        if executor is not None and executor.sharded:
+            # mesh-parallel serving: the executor's greedy cost-balanced
+            # placement replaces the host work-stealing loop — one run
+            # carries every (cache-aware) cluster, fanned across the
+            # per-device replicas and gathered back here
+            r = self.engine.run(queries, planner=Planner.BATCH,
+                                clusters=clusters)
+            for i, qid in enumerate(qids):
+                self.results[qid] = r[i].offload()
+            for key in agg:
+                agg[key] += r.stats.get(key, 0)
+            per_device = r.stats.get("per_device")
+        else:
+            cids = self.sched.submit([[qids[li] for li in cl]
+                                      for cl in clusters])
+            open_cids = set(cids)
+            while open_cids:
+                progressed = False
+                for grp in range(self.n_groups):
+                    item = self.sched.next_for(grp)
+                    if item is None:
+                        continue
+                    progressed = True
+                    sub = [self._query_of[qid] for qid in item.queries]
+                    # the item IS one cluster — pass it through so the
+                    # engine keeps our (cache-aware) grouping instead of
+                    # re-clustering
+                    r = self.engine.run(sub, planner=Planner.BATCH,
+                                        clusters=[list(range(len(sub)))])
+                    for i, qid in enumerate(item.queries):
+                        # results may sit untaken indefinitely — offload so
+                        # the backlog holds compact host rows, not padded
+                        # device buffers (count/exists results hold none)
+                        self.results[qid] = r[i].offload()
+                    for key in agg:
+                        agg[key] += r.stats.get(key, 0)
+                    self.sched.complete(item.cluster_id, True)
+                    open_cids.discard(item.cluster_id)
+                if not progressed and not any(
+                        cid in self.sched.in_flight for cid in open_cids):
+                    break   # nothing runnable (foreign in-flight work only)
         wall = time.perf_counter() - t0
         Q = len(queries)
         self.batch_log.append({
@@ -281,6 +306,8 @@ class StreamingServer:
             # retraces paid inside apply_delta itself (0 for in-bucket
             # churn; nonzero only when a delta crossed a shape bucket)
             "delta_retraces": sum(d.get("n_retraces", 0) for d in deltas),
+            **({"per_device": per_device,
+                "n_devices": len(per_device)} if per_device else {}),
             **agg,
             **({"cache": self.engine.cache.info()}
                if self.engine.cache is not None else {}),
@@ -319,6 +346,9 @@ def main() -> None:
     ap.add_argument("--cache-mb", type=int, default=256,
                     help="cross-batch cache budget in MiB (0 disables)")
     ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="shard over the first N local devices (0 = plain "
+                         "single-device; see docs/serving.md §Sharded)")
     args = ap.parse_args()
     if args.rounds < 1:
         ap.error("--rounds must be >= 1")
@@ -326,7 +356,8 @@ def main() -> None:
     g = generators.community(args.n, n_comm=max(4, args.n // 2500),
                              avg_deg=6.0, seed=0)
     engine = BatchPathEngine(g, EngineConfig(
-        min_cap=128, cache_bytes=args.cache_mb << 20))
+        min_cap=128, cache_bytes=args.cache_mb << 20,
+        n_devices=args.devices or None))
     queries = generators.similar_queries(g, args.queries, args.similarity,
                                          (args.k_min, args.k_max), seed=1)
     srv = StreamingServer(engine, n_groups=args.groups,
