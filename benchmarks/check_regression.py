@@ -86,6 +86,40 @@ def check_dynamic(current: dict, baseline: dict, max_regression: float) -> None:
             f"(baseline {base * 1e3:.1f}ms + {max_regression:.0%})")
 
 
+def check_kernels(current: dict, baseline: dict | None) -> None:
+    """Gate the fused-kernel dispatch contract (all structural/deterministic):
+    the packed sweeps must stay warm, and the fused arm must dispatch
+    strictly fewer ops per MS-BFS level than the jnp reference arm — both
+    within this run and against the committed jnp baseline."""
+    if current.get("warm_retraces", -1) != 0:
+        _fail(f"kernel warm sweeps retraced: {current.get('warm_retraces')} "
+              f"({current.get('warm_compiles_by_kernel')})")
+    else:
+        _ok("kernel warm sweeps retraces: 0")
+    disp = current.get("dispatch", {})
+    fused = disp.get("fused_eqns_per_level")
+    ref = disp.get("jnp_eqns_per_level")
+    if fused is None or ref is None:
+        _fail("dispatch counts missing from kernels json")
+        return
+    if fused >= ref:
+        _fail(f"fused arm dispatches {fused} eqns/level, not fewer than "
+              f"the jnp arm's {ref}")
+    else:
+        _ok(f"fused eqns/level {fused} < jnp {ref} "
+            f"(compiled jnp entry ops: {disp.get('jnp_hlo_entry_ops')})")
+    if baseline is not None:
+        base_ref = baseline.get("dispatch", {}).get("jnp_eqns_per_level")
+        if base_ref is None:
+            _fail("jnp_eqns_per_level missing from kernels baseline")
+        elif fused >= base_ref:
+            _fail(f"fused eqns/level {fused} not below committed jnp "
+                  f"baseline {base_ref}")
+        else:
+            _ok(f"fused eqns/level {fused} < committed jnp baseline "
+                f"{base_ref}")
+
+
 def check_sharded(current: dict, min_speedup: float) -> None:
     if not current.get("equal", False):
         _fail("sharded results are NOT equal to single-device")
@@ -124,9 +158,15 @@ def main() -> None:
     ap.add_argument("--min-sharded-speedup", type=float, default=1.5,
                     help="required sharded-vs-single warm speedup when "
                          "more than one device is visible")
+    ap.add_argument("--kernels", type=Path, default=None,
+                    help="this run's results/BENCH_kernels.json")
+    ap.add_argument("--kernels-baseline", type=Path, default=None,
+                    help="committed BENCH_kernels baseline json (optional; "
+                         "adds the fused-vs-committed-jnp dispatch gate)")
     args = ap.parse_args()
-    if args.current is None and args.sharded is None:
-        ap.error("nothing to check: pass --current and/or --sharded")
+    if args.current is None and args.sharded is None and args.kernels is None:
+        ap.error("nothing to check: pass --current, --sharded and/or "
+                 "--kernels")
 
     if args.current is not None:
         if args.baseline is None:
@@ -139,6 +179,13 @@ def main() -> None:
         print(f"sharded: {args.sharded}")
         check_sharded(json.loads(args.sharded.read_text()),
                       args.min_sharded_speedup)
+    if args.kernels is not None:
+        print(f"kernels: {args.kernels}"
+              + (f" vs baseline {args.kernels_baseline}"
+                 if args.kernels_baseline else ""))
+        base = (json.loads(args.kernels_baseline.read_text())
+                if args.kernels_baseline else None)
+        check_kernels(json.loads(args.kernels.read_text()), base)
     if FAILURES:
         sys.exit(f"{len(FAILURES)} regression check(s) failed")
     print("all regression checks passed")

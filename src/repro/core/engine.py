@@ -30,8 +30,10 @@ from .cache import SharedPathCache
 from .delta import (AppliedDelta, GraphDelta, apply_delta as _merge_delta,
                     host_set_dist, pow2_ceil as _pow2, update_device_graph)
 from .graph import DeviceGraph, Graph
-from .index import QueryIndex, build_index, slack_from_dists, walk_counts
-from .msbfs import edge_span, msbfs_set_dist
+from .index import (QueryIndex, build_index, slack_from_dists, walk_counts,
+                    walk_counts_ell)
+from .msbfs import edge_span, msbfs_set_dist, msbfs_set_dist_ell
+from ..kernels.registry import resolve_backend
 from .pathset import PathSet, concat, empty, singleton
 from .enumerate import (count_ending_at, expand_level, extract_rows,
                         select_ending_at)
@@ -58,7 +60,12 @@ class EngineOverflow(RuntimeError):
 @dataclasses.dataclass
 class EngineConfig:
     gamma: float = 0.5              # clustering threshold (paper default)
-    backend: str = "jnp"            # "jnp" | "pallas" (kernel-backed index/similarity)
+    backend: Optional[str] = None   # DEPRECATED alias of kernel_backend
+    # (kept one release for old callers; setting it warns at engine init)
+    kernel_backend: Optional[str] = None  # "pallas" | "interpret" | "jnp";
+    # None resolves via kernels.registry (REPRO_KERNEL_BACKEND env, else
+    # auto: pallas on TPU, jnp elsewhere). Unknown names raise ValueError
+    # at engine construction.
     min_cap: int = 256
     max_cap: int = 1 << 20          # planned per-level frontier cap clamp
     hard_cap: int = 1 << 22         # absolute limit before EngineOverflow
@@ -122,6 +129,20 @@ class BatchPathEngine:
                  cache: Optional[SharedPathCache] = None):
         self.g = graph
         self.cfg = config or EngineConfig()
+        kb = self.cfg.kernel_backend
+        if self.cfg.backend is not None:
+            warnings.warn(
+                "EngineConfig.backend is deprecated; use "
+                "EngineConfig.kernel_backend", DeprecationWarning,
+                stacklevel=2)
+            if kb is None:
+                kb = self.cfg.backend
+        # resolve once at construction: explicit > REPRO_KERNEL_BACKEND env
+        # > auto (pallas on TPU, jnp elsewhere); typos raise here, not as a
+        # silently different code path mid-batch
+        self.kernel_backend = resolve_backend(kb)
+        # plain string for jit static args (clean cache keys, no enum repr)
+        self._kb = self.kernel_backend.value
         mesh = distributed.resolve_mesh(self.cfg.mesh, self.cfg.n_devices)
         if mesh is None:
             self.dg = DeviceGraph.build(graph)
@@ -294,6 +315,15 @@ class BatchPathEngine:
         # mesh (the index view re-shards only after the patch).
         kdg = self._kernel_dg()
         dists = {}
+        if self.kernel_backend.uses_kernel:
+            # fused bit-packed sweep: "from" distances relax over G's
+            # in-neighbors (r_ell), "to" over G_r's (ell) — bit-equal to
+            # the segment path below
+            for name, ell in (("from", kdg.r_ell_idx), ("to", kdg.ell_idx)):
+                d = msbfs_set_dist_ell(ell, seed, n=self.g.n, k_max=k_max,
+                                       backend=self._kb)
+                dists[name] = np.asarray(d)
+            return dists
         m_valid = edge_span(kdg.m, self.cfg.edge_chunk, kdg.m_cap)
         for name, (esrc, edst) in (("from", (kdg.esrc, kdg.edst)),
                                    ("to", (kdg.r_esrc, kdg.r_edst))):
@@ -356,6 +386,7 @@ class BatchPathEngine:
         planner = Planner.coerce(planner)
         plus = planner.plus or self.cfg.plus
         stats: dict = {"planner": planner.value, "mode": planner.value,
+                       "kernel_backend": self._kb,
                        "n_queries": len(qs), "n_rows_assembled": 0}
         if not qs:   # degenerate but legal (e.g. a filter left nothing)
             stats["t_build_index"] = stats["t_enumerate"] = 0.0
@@ -364,7 +395,7 @@ class BatchPathEngine:
         if planner is Planner.PATHENUM:
             return self._run_pathenum(qs, stats)
         index = build_index(self._kernel_dg(), [q.key for q in qs],
-                            self.cfg.edge_chunk)
+                            self.cfg.edge_chunk, backend=self._kb)
         index.dist_s.block_until_ready()
         stats["t_build_index"] = time.perf_counter() - t0
         if planner.batched:
@@ -412,7 +443,7 @@ class BatchPathEngine:
         for q in queries:
             t0 = time.perf_counter()
             index = build_index(self._kernel_dg(), [q.key],
-                                self.cfg.edge_chunk)
+                                self.cfg.edge_chunk, backend=self._kb)
             index.dist_s.block_until_ready()
             dt_idx = time.perf_counter() - t0
             t_idx += dt_idx
@@ -442,7 +473,7 @@ class BatchPathEngine:
                    clusters: Optional[list[list[int]]] = None) -> BatchReport:
         t0 = time.perf_counter()
         if clusters is None:
-            mu = similarity_matrix(index, backend=self.cfg.backend)
+            mu = similarity_matrix(index, backend=self._kb)
             min_clusters = 1
             if self.cfg.balance_clusters and self.executor is not None:
                 min_clusters = self.executor.n_replicas
@@ -649,7 +680,8 @@ class BatchPathEngine:
                 break
             out = expand_level(frontier.verts, frontier.count, ell_idx, ell_mask,
                                slack, splice_vec, stop,
-                               level=lvl, budget=budget, out_cap=caps[lvl + 1])
+                               level=lvl, budget=budget, out_cap=caps[lvl + 1],
+                               backend=self._kb)
             if bool(out.frontier.overflow):
                 return None
             for (csrc, cb, clevels) in children:
@@ -665,7 +697,8 @@ class BatchPathEngine:
                     res = self._retry_join(
                         lambda cap: cross_join(
                             prefixes.verts, prefixes.count, cl.verts, cl.count,
-                            p_col=lvl, c_col=lam, out_cap=cap, out_width=width),
+                            p_col=lvl, c_col=lam, out_cap=cap, out_width=width,
+                            backend=self._kb),
                         est=int(prefixes.count) * int(cl.count))
                     pools[lvl + 1 + lam].append(res)
             frontier = out.frontier
@@ -760,7 +793,8 @@ class BatchPathEngine:
                     continue
                 res = self._retry_join(
                     lambda cap: keyed_join(sa, bs.verts, bs.count, a_col=a,
-                                           b_col=lam, out_cap=cap, out_width=width),
+                                           b_col=lam, out_cap=cap,
+                                           out_width=width, backend=self._kb),
                     est=max(int(fa.count), int(bs.count)))
                 if int(res.count):
                     outs.append(res)
@@ -798,7 +832,8 @@ class BatchPathEngine:
                 total += self._retry_count(
                     lambda cap: keyed_join_count(sa, bs.verts, bs.count,
                                                  a_col=a, b_col=lam,
-                                                 pair_cap=cap),
+                                                 pair_cap=cap,
+                                                 backend=self._kb),
                     est=max(int(fa.count), int(bs.count)))
                 if limit is not None and total >= limit:
                     return limit
@@ -819,15 +854,8 @@ class BatchPathEngine:
         fs = self._dedicated_slack(index, qi, forward=True)
         bs = self._dedicated_slack(index, qi, forward=False)
         kdg = self._kernel_dg()
-        mv = self._m_valid(kdg)
-        cf = np.asarray(walk_counts(kdg.esrc, kdg.edst, s, fs,
-                                    n=kdg.n, budget=k - 1,
-                                    edge_chunk=self.cfg.edge_chunk,
-                                    m_valid=mv))
-        cb = np.asarray(walk_counts(kdg.r_esrc, kdg.r_edst, t, bs,
-                                    n=kdg.n, budget=k - 1,
-                                    edge_chunk=self.cfg.edge_chunk,
-                                    m_valid=mv))
+        cf = self._walk_counts(kdg, False, s, fs, k - 1)
+        cb = self._walk_counts(kdg, True, t, bs, k - 1)
         best, best_cost = a, None
         for cand in range(1, k):
             cost = cf[:cand + 1].sum() + cb[:k - cand + 1].sum()
@@ -880,16 +908,31 @@ class BatchPathEngine:
         dg = self.dg if dg is None else dg
         return edge_span(dg.m, self.cfg.edge_chunk, dg.m_cap)
 
+    def _walk_counts(self, kdg: DeviceGraph, reverse: bool, source, slack,
+                     budget: int) -> np.ndarray:
+        """Per-level walk-count DP through the configured kernel backend:
+        one ELL gather-reduce dispatch per level (``walk_counts_ell``) on
+        the kernel route, the chunked edge-list segment_sum on jnp.
+        Totals are integer-valued f32, identical below 2**24."""
+        if self.kernel_backend.uses_kernel:
+            # in-neighbor table of the swept direction: forward counts on G
+            # relax over r_ell (in-nbrs of G), reverse counts over ell
+            ell = kdg.ell_idx if reverse else kdg.r_ell_idx
+            return np.asarray(walk_counts_ell(ell, source, slack, n=kdg.n,
+                                              budget=budget,
+                                              backend=self._kb))
+        esrc = kdg.r_esrc if reverse else kdg.esrc
+        edst = kdg.r_edst if reverse else kdg.edst
+        return np.asarray(walk_counts(esrc, edst, source, slack, n=kdg.n,
+                                      budget=budget,
+                                      edge_chunk=self.cfg.edge_chunk,
+                                      m_valid=self._m_valid(kdg)))
+
     def _plan_caps(self, reverse: bool, source: int, budget: int, slack):
         if not self.cfg.plan_caps:
             return [self.cfg.min_cap] * (budget + 1)
         kdg = self._kernel_dg()
-        esrc = kdg.r_esrc if reverse else kdg.esrc
-        edst = kdg.r_edst if reverse else kdg.edst
-        tot = np.asarray(walk_counts(esrc, edst, source, slack, n=kdg.n,
-                                     budget=budget,
-                                     edge_chunk=self.cfg.edge_chunk,
-                                     m_valid=self._m_valid(kdg)))
+        tot = self._walk_counts(kdg, reverse, source, slack, budget)
         caps = [_bucket(min(int(min(t, 2**31)), self.cfg.max_cap),
                         self.cfg.min_cap) for t in tot]
         return caps

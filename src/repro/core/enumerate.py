@@ -31,12 +31,13 @@ class ExpandOut(NamedTuple):
     splice_hit: jax.Array  # (cap, D) bool -- candidates redirected to splice
 
 
-@partial(jax.jit, static_argnames=("level", "budget", "out_cap"))
+@partial(jax.jit, static_argnames=("level", "budget", "out_cap", "backend"))
 def expand_level(verts: jax.Array, count: jax.Array,
                  ell_idx: jax.Array, ell_mask: jax.Array,
                  slack: jax.Array, splice_budget: jax.Array,
                  stop_vertex: jax.Array,
-                 *, level: int, budget: int, out_cap: int) -> ExpandOut:
+                 *, level: int, budget: int, out_cap: int,
+                 backend: str = "jnp") -> ExpandOut:
     """One superstep: expand all level-`level` paths by one hop.
 
     verts:  (cap, L) int32 frontier paths (cols 0..level used).
@@ -46,6 +47,9 @@ def expand_level(verts: jax.Array, count: jax.Array,
             splice_budget[v] >= budget-(level+1) splice instead of expanding.
     stop_vertex: () int32 -- do not expand *from* this vertex (dedicated
             query optimization; pass -2 to disable).
+    backend: static resolved kernel backend; ``pallas``/``interpret`` route
+            the duplicate-vertex mask through one kernels/path_join
+            membership dispatch instead of the broadcast-compare chain.
     """
     cap, L = verts.shape
     n = ell_idx.shape[0] - 1  # ell tables carry a sentinel row n
@@ -56,7 +60,11 @@ def expand_level(verts: jax.Array, count: jax.Array,
     valid = ell_mask[last] & row_valid[:, None]
     valid &= (last != stop_vertex)[:, None]
     # duplicate-vertex mask: candidate already on the path
-    dup = (nbrs[:, :, None] == verts[:, None, :level + 1]).any(-1)
+    if backend != "jnp":
+        from ..kernels.path_join.ops import path_member
+        dup = path_member(verts[:, :level + 1], nbrs, backend=backend)
+    else:
+        dup = (nbrs[:, :, None] == verts[:, None, :level + 1]).any(-1)
     # Lemma 3.1 prune at depth level+1
     keep = valid & ~dup & (slack[nbrs] >= level + 1)
     # splice triggers (cached dominating query covers the remaining budget)

@@ -25,9 +25,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from .graph import DeviceGraph, Graph
-from .msbfs import edge_span, msbfs_dist, INF_FOR
+from .msbfs import edge_span, msbfs_dist, msbfs_dist_ell, INF_FOR
 
-__all__ = ["QueryIndex", "build_index", "walk_counts", "slack_from_dists"]
+__all__ = ["QueryIndex", "build_index", "walk_counts", "walk_counts_ell",
+           "slack_from_dists"]
 
 Query = tuple[int, int, int]  # (s, t, k)
 
@@ -79,13 +80,22 @@ def slack_from_dists(dist_cols: jax.Array, ks: np.ndarray, offsets: np.ndarray,
 
 
 def build_index(dg: DeviceGraph, queries: Sequence[Query],
-                edge_chunk: int = 1 << 22) -> QueryIndex:
+                edge_chunk: int = 1 << 22,
+                backend: Optional[str] = None) -> QueryIndex:
     """Multi-source BFS from all sources on G and all targets on G_r.
 
     ``dg``'s edge lists may be sentinel-padded to a pow2 bucket; the
     chunk-rounded valid-edge span (``edge_span``) is threaded into the
     MS-BFS so the sweep skips all-sentinel chunks without the raw edge
     count ever becoming a trace-shaping value.
+
+    ``backend``: a resolved kernel backend. ``None``/``"jnp"`` runs the
+    segment-op sweeps over the edge lists; ``"pallas"``/``"interpret"``
+    runs the fused bit-packed ELL sweeps (``msbfs_dist_ell``) — one
+    dispatch per level, bit-equal distances. Forward distances gather the
+    reverse ELL table (in-neighbors of G) and vice versa; the ELL tables
+    are replicated even on a sharded engine, so the kernel route never
+    depends on the GSPMD edge partition.
     """
     queries = tuple((int(s), int(t), int(k)) for s, t, k in queries)
     k_max = max(k for _, _, k in queries)
@@ -93,13 +103,19 @@ def build_index(dg: DeviceGraph, queries: Sequence[Query],
     tgts = np.unique(np.array([q[1] for q in queries], np.int32))
     src_col = np.searchsorted(srcs, [q[0] for q in queries]).astype(np.int32)
     tgt_col = np.searchsorted(tgts, [q[1] for q in queries]).astype(np.int32)
-    m_valid = edge_span(dg.m, edge_chunk, dg.m_cap)
-    dist_s = msbfs_dist(dg.esrc, dg.edst, jnp.asarray(srcs),
-                        n=dg.n, k_max=k_max, edge_chunk=edge_chunk,
-                        m_valid=m_valid)
-    dist_t = msbfs_dist(dg.r_esrc, dg.r_edst, jnp.asarray(tgts),
-                        n=dg.n, k_max=k_max, edge_chunk=edge_chunk,
-                        m_valid=m_valid)
+    if backend is not None and backend != "jnp":
+        dist_s = msbfs_dist_ell(dg.r_ell_idx, jnp.asarray(srcs),
+                                n=dg.n, k_max=k_max, backend=backend)
+        dist_t = msbfs_dist_ell(dg.ell_idx, jnp.asarray(tgts),
+                                n=dg.n, k_max=k_max, backend=backend)
+    else:
+        m_valid = edge_span(dg.m, edge_chunk, dg.m_cap)
+        dist_s = msbfs_dist(dg.esrc, dg.edst, jnp.asarray(srcs),
+                            n=dg.n, k_max=k_max, edge_chunk=edge_chunk,
+                            m_valid=m_valid)
+        dist_t = msbfs_dist(dg.r_esrc, dg.r_edst, jnp.asarray(tgts),
+                            n=dg.n, k_max=k_max, edge_chunk=edge_chunk,
+                            m_valid=m_valid)
     return QueryIndex(queries=queries, k_max=k_max, sources=srcs, targets=tgts,
                       src_col=src_col, tgt_col=tgt_col,
                       dist_s=dist_s, dist_t=dist_t, INF=INF_FOR(k_max))
@@ -138,5 +154,32 @@ def walk_counts(esrc: jax.Array, edst: jax.Array, source, slack: jax.Array,
                                             indices_are_sorted=True)
         nxt = nxt * (slack[:-1] >= lvl)
         c = jnp.concatenate([nxt, jnp.zeros((1,), jnp.float32)])
+        totals.append(jnp.sum(nxt))
+    return jnp.stack(totals)
+
+
+@partial(jax.jit, static_argnames=("n", "budget", "backend"))
+def walk_counts_ell(ell_in_idx: jax.Array, source, slack: jax.Array,
+                    *, n: int, budget: int,
+                    backend: str = "interpret") -> jax.Array:
+    """Kernel twin of :func:`walk_counts`: the per-level DP step is one
+    ELL gather-reduce dispatch (kernels/ell_spmm) instead of the chunked
+    edge-list segment_sum.
+
+    ell_in_idx: (n+1, D) padded ELL *in*-neighbor table (forward counts on
+    G take ``dg.r_ell_idx``, reverse counts take ``dg.ell_idx`` — same
+    convention as :func:`~repro.core.msbfs.msbfs_dist_ell`). Totals are
+    integer-valued f32, exact (= bit-equal to the segment path) below
+    2**24 regardless of reduce order.
+    """
+    from ..kernels.ell_spmm.ops import ell_aggregate
+
+    idx = ell_in_idx[:n]                       # (n, D), pad = n
+    c = jnp.zeros((n,), jnp.float32).at[source].set(1.0)
+    totals = [jnp.float32(1.0)]
+    for lvl in range(1, budget + 1):
+        nxt = ell_aggregate(idx, c[:, None], op="sum", backend=backend)[:, 0]
+        nxt = nxt * (slack[:-1] >= lvl)
+        c = nxt
         totals.append(jnp.sum(nxt))
     return jnp.stack(totals)

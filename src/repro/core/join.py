@@ -13,6 +13,23 @@ Both enumerate pair-ids into a static `out_cap` buffer with an overflow
 flag, assemble the concatenated vertex rows, and apply the vectorized
 simple-path (duplicate-vertex) filter -- the O(L^2) check the paper does
 per emitted path (Alg 1 line 8 / Alg 4 line 13).
+
+Backend routing (static ``backend`` arg, a resolved kernel-backend value):
+the ``jnp`` path materializes the assembled rows and runs the dense
+``_dup_mask`` pairwise-equality check; the kernel path
+(``pallas``/``interpret``) replaces it with one row-aligned overlap
+dispatch (kernels/path_join.rowwise_overlap) over the *half* rows:
+
+  * keyed join : both halves are simple and share the key vertex, so the
+    assembled row has a duplicate  <=>  overlap(A[:a+1], B[:b+1]) >= 2,
+    i.e. valid <=> key match & overlap == 1.
+  * cross join : prefix and child are each simple, so a duplicate
+    <=>  overlap(prefix, child) >= 1, i.e. valid <=> overlap == 0.
+
+The equivalence relies on the engine invariant that every half row is
+itself simple (frontier paths and cached suffixes are, by construction);
+``_dup_mask`` additionally detects in-half duplicates, which cannot occur
+on engine inputs — property tests pin the two paths bit-equal there.
 """
 from __future__ import annotations
 
@@ -52,6 +69,28 @@ def _dup_mask(assembled: jax.Array, width: int) -> jax.Array:
     return (eq & iu[None]).any((1, 2))
 
 
+def _join_ok_keyed(a_rows: jax.Array, b_full: jax.Array, assembled: jax.Array,
+                   width: int, backend: str) -> jax.Array:
+    """Simple-path validity for keyed-join candidates (see module docstring):
+    the jnp route checks the assembled row densely; the kernel route runs
+    one row-aligned overlap dispatch over the halves (valid <=> the key
+    vertex is the only shared one)."""
+    if backend == "jnp":
+        return ~_dup_mask(assembled, width)
+    from ..kernels.path_join.ops import rowwise_overlap
+    return rowwise_overlap(a_rows, b_full, backend=backend) == 1
+
+
+def _join_ok_cross(p_rows: jax.Array, c_rows: jax.Array, assembled: jax.Array,
+                   width: int, backend: str) -> jax.Array:
+    """Simple-path validity for splice-join candidates: prefix and child are
+    vertex-disjoint <=> their row-aligned overlap count is zero."""
+    if backend == "jnp":
+        return ~_dup_mask(assembled, width)
+    from ..kernels.path_join.ops import rowwise_overlap
+    return rowwise_overlap(p_rows, c_rows, backend=backend) == 0
+
+
 def _enumerate_pairs(a: SortedSide, b_verts: jax.Array, b_count: jax.Array,
                      b_col: int, out_cap: int):
     """Key-bucket pair enumeration shared by the materializing and
@@ -78,9 +117,11 @@ def _enumerate_pairs(a: SortedSide, b_verts: jax.Array, b_count: jax.Array,
     return a_pos, b_idx, pair_valid, total
 
 
-@partial(jax.jit, static_argnames=("a_col", "b_col", "out_cap", "out_width"))
+@partial(jax.jit,
+         static_argnames=("a_col", "b_col", "out_cap", "out_width", "backend"))
 def keyed_join(a: SortedSide, b_verts: jax.Array, b_count: jax.Array,
-               *, a_col: int, b_col: int, out_cap: int, out_width: int) -> PathSet:
+               *, a_col: int, b_col: int, out_cap: int, out_width: int,
+               backend: str = "jnp") -> PathSet:
     """⊕ join: A rows (forward, last col = a_col) with B rows (backward,
     last col = b_col) sharing the last vertex.
 
@@ -91,22 +132,23 @@ def keyed_join(a: SortedSide, b_verts: jax.Array, b_count: jax.Array,
         a, b_verts, b_count, b_col, out_cap)
 
     a_rows = a.verts[a_pos][:, :a_col + 1]                  # (out_cap, a_col+1)
-    b_rows = b_verts[b_idx][:, :b_col]                      # cols 0..b_col-1
-    b_rev = b_rows[:, ::-1]                                 # x_{b-1} ... x_1, t
+    b_full = b_verts[b_idx][:, :b_col + 1]                  # incl. key vertex
+    b_rev = b_full[:, :b_col][:, ::-1]                      # x_{b-1} ... x_1, t
     assembled = jnp.full((out_cap, out_width), -1, jnp.int32)
     assembled = assembled.at[:, :a_col + 1].set(a_rows)
     assembled = assembled.at[:, a_col + 1:a_col + 1 + b_col].set(b_rev)
     assembled = jnp.where(pair_valid[:, None], assembled, -1)
 
-    ok = pair_valid & ~_dup_mask(assembled, out_width)
+    ok = pair_valid & _join_ok_keyed(a_rows, b_full, assembled, out_width,
+                                     backend)
     out, n_out, ovf = compact_rows(ok, assembled, out_cap)
     return PathSet(out, n_out, ovf | (total > out_cap))
 
 
-@partial(jax.jit, static_argnames=("a_col", "b_col", "pair_cap"))
+@partial(jax.jit, static_argnames=("a_col", "b_col", "pair_cap", "backend"))
 def keyed_join_count(a: SortedSide, b_verts: jax.Array, b_count: jax.Array,
-                     *, a_col: int, b_col: int,
-                     pair_cap: int) -> tuple[jax.Array, jax.Array]:
+                     *, a_col: int, b_col: int, pair_cap: int,
+                     backend: str = "jnp") -> tuple[jax.Array, jax.Array]:
     """Count ⊕-join results without assembling an output PathSet.
 
     Same pair enumeration and simple-path filter as :func:`keyed_join`, but
@@ -120,17 +162,19 @@ def keyed_join_count(a: SortedSide, b_verts: jax.Array, b_count: jax.Array,
 
     width = a_col + 1 + b_col
     a_rows = a.verts[a_pos][:, :a_col + 1]
-    b_rev = b_verts[b_idx][:, :b_col][:, ::-1]
-    assembled = jnp.concatenate([a_rows, b_rev], axis=1)
+    b_full = b_verts[b_idx][:, :b_col + 1]
+    assembled = jnp.concatenate([a_rows, b_full[:, :b_col][:, ::-1]], axis=1)
     assembled = jnp.where(pair_valid[:, None], assembled, -1)
-    ok = pair_valid & ~_dup_mask(assembled, width)
+    ok = pair_valid & _join_ok_keyed(a_rows, b_full, assembled, width, backend)
     return ok.sum(dtype=jnp.int32), total > pair_cap
 
 
-@partial(jax.jit, static_argnames=("p_col", "c_col", "out_cap", "out_width"))
+@partial(jax.jit,
+         static_argnames=("p_col", "c_col", "out_cap", "out_width", "backend"))
 def cross_join(p_verts: jax.Array, p_count: jax.Array,
                c_verts: jax.Array, c_count: jax.Array,
-               *, p_col: int, c_col: int, out_cap: int, out_width: int) -> PathSet:
+               *, p_col: int, c_col: int, out_cap: int, out_width: int,
+               backend: str = "jnp") -> PathSet:
     """Splice join: every prefix (cols 0..p_col) × every cached child path
     (cols 0..c_col; child path starts at the spliced vertex).
 
@@ -151,6 +195,7 @@ def cross_join(p_verts: jax.Array, p_count: jax.Array,
     assembled = assembled.at[:, p_col + 1:p_col + 2 + c_col].set(c_rows)
     assembled = jnp.where(pair_valid[:, None], assembled, -1)
 
-    ok = pair_valid & ~_dup_mask(assembled, out_width)
+    ok = pair_valid & _join_ok_cross(p_rows, c_rows, assembled, out_width,
+                                     backend)
     out, n_out, ovf = compact_rows(ok, assembled, out_cap)
     return PathSet(out, n_out, ovf | (total > out_cap))

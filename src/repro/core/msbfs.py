@@ -32,8 +32,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["msbfs_dist", "msbfs_set_dist", "msbfs_hop", "INF_FOR",
-           "edge_span"]
+__all__ = ["msbfs_dist", "msbfs_set_dist", "msbfs_hop", "msbfs_dist_ell",
+           "msbfs_set_dist_ell", "INF_FOR", "edge_span"]
 
 
 def INF_FOR(k_max: int) -> int:
@@ -133,3 +133,86 @@ def msbfs_dist(esrc: jax.Array, edst: jax.Array, sources: jax.Array,
         frontier = new.at[n].set(0)
         # NOTE: no early exit under jit; k_max is small (<= 8 in the paper).
     return dist.at[n].set(INF)
+
+
+# ---------------------------------------------------------------------------
+# fused-kernel twins: bit-packed sweeps over the padded ELL in-neighbor
+# table (kernels/msbfs_expand). One level = ONE device dispatch (expand +
+# visited dedup + distance write fused in msbfs_step) instead of the
+# segment-op path's gather / segment_max / mask-mul / where chain. The ELL
+# tables are already sentinel-padded to stable pow2 capacities
+# (DeviceGraph.build), so these sweeps inherit the zero-warm-retrace
+# guarantee without edge chunking: m_valid has no analogue here because
+# sentinel rows gather the all-zero frontier row n and contribute nothing.
+#
+# Direction convention (matches msbfs_dist's edge-list arguments):
+# relaxation is next[v] = OR over in-neighbors u of v, so forward
+# distances on G take the *reverse* table dg.r_ell_idx (out-neighbors in
+# G_r == in-neighbors in G) and distances on G_r take dg.ell_idx.
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("n", "k_max", "backend"))
+def msbfs_dist_ell(ell_in_idx: jax.Array, sources: jax.Array,
+                   *, n: int, k_max: int, backend: str = "jnp") -> jax.Array:
+    """Fused-kernel twin of :func:`msbfs_dist`.
+
+    ell_in_idx : (n+1, D) int32 padded ELL *in*-neighbor table (pad = n;
+                 row n is the sentinel row, never expanded).
+    sources    : (S,) int32.
+    backend    : static "pallas" | "interpret" | "jnp" (resolved by the
+                 caller; a registry enum's value — strings keep the jit
+                 cache key plain).
+    Returns (n+1, S) int8, bit-equal to :func:`msbfs_dist` on the same
+    graph (distances are set-membership facts; only the dispatch shape of
+    a level differs between backends).
+    """
+    from ..kernels.msbfs_expand.ops import msbfs_step
+    from ..kernels.msbfs_expand.ref import pack_bits
+
+    S = sources.shape[0]
+    W = -(-S // 32)
+    INF = np.int8(INF_FOR(k_max))
+    idx = ell_in_idx[:n]                                   # drop sentinel row
+    cols = jnp.arange(S)
+    seed_bits = jnp.zeros((n + 1, S), bool).at[sources, cols].set(True)
+    seed_bits = seed_bits.at[n].set(False)                 # sentinel stays 0
+    frontier = pack_bits(seed_bits)                        # (n+1, W)
+    visited = frontier[:n]                                 # seeds reached @0
+    dist = jnp.full((n, W * 32), INF, jnp.int8)
+    dist = dist.at[sources, cols].min(jnp.int8(0))
+    for hop in range(1, k_max + 1):
+        frontier, visited, dist = msbfs_step(idx, frontier, visited, dist,
+                                             hop, backend=backend)
+        frontier = jnp.concatenate(
+            [frontier, jnp.zeros((1, W), jnp.uint32)], axis=0)
+    dist = dist[:, :S]                                     # drop word padding
+    return jnp.concatenate([dist, jnp.full((1, S), INF, jnp.int8)], axis=0)
+
+
+@partial(jax.jit, static_argnames=("n", "k_max", "backend"))
+def msbfs_set_dist_ell(ell_in_idx: jax.Array, seed_mask: jax.Array,
+                       *, n: int, k_max: int,
+                       backend: str = "jnp") -> jax.Array:
+    """Fused-kernel twin of :func:`msbfs_set_dist` (one bit column seeded
+    with the whole vertex set; 31 of the word's 32 lanes idle — the fused
+    dispatch still wins by collapsing the per-level op chain).
+
+    seed_mask : (n+1,) int8 in {0,1} (row n must be 0).
+    Returns (n+1,) int8 bit-equal to :func:`msbfs_set_dist`.
+    """
+    from ..kernels.msbfs_expand.ops import msbfs_step
+    from ..kernels.msbfs_expand.ref import pack_bits
+
+    INF = np.int8(INF_FOR(k_max))
+    idx = ell_in_idx[:n]
+    seed = seed_mask.astype(bool).at[n].set(False)
+    frontier = pack_bits(seed[:, None])                    # (n+1, 1)
+    visited = frontier[:n]
+    dist = jnp.full((n, 32), INF, jnp.int8)
+    dist = dist.at[:, 0].set(jnp.where(seed[:n], jnp.int8(0), INF))
+    for hop in range(1, k_max + 1):
+        frontier, visited, dist = msbfs_step(idx, frontier, visited, dist,
+                                             hop, backend=backend)
+        frontier = jnp.concatenate(
+            [frontier, jnp.zeros((1, 1), jnp.uint32)], axis=0)
+    return jnp.concatenate([dist[:, 0], jnp.full((1,), INF, jnp.int8)])

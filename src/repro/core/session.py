@@ -53,6 +53,11 @@ class PathSession:
         device count) the engine shards its index over and places
         sharing clusters on. A mesh of size 1 is the identity; both are
         ignored when wrapping an existing engine.
+    kernel_backend : kernel-dispatch override ("pallas" | "interpret" |
+        "jnp"), overriding ``EngineConfig.kernel_backend`` — None defers
+        to the engine config / ``REPRO_KERNEL_BACKEND`` env / platform
+        auto-detection (see :mod:`repro.kernels.registry`). Ignored when
+        wrapping an existing engine.
     n_groups / policy / gamma / warm_bias_eps : streaming-server knobs,
         applied when the first query is submitted.
     """
@@ -62,6 +67,7 @@ class PathSession:
                  planner: Planner | str = Planner.BATCH,
                  cache: Optional[SharedPathCache] = None,
                  mesh=None, n_devices: Optional[int] = None,
+                 kernel_backend: Optional[str] = None,
                  n_groups: int = 2, policy=None,
                  gamma: Optional[float] = None,
                  warm_bias_eps: float = 0.08):
@@ -71,6 +77,9 @@ class PathSession:
             if mesh is not None or n_devices is not None:
                 config = dataclasses.replace(config or EngineConfig(),
                                              mesh=mesh, n_devices=n_devices)
+            if kernel_backend is not None:
+                config = dataclasses.replace(config or EngineConfig(),
+                                             kernel_backend=kernel_backend)
             self.engine = BatchPathEngine(graph, config, cache=cache)
         self.planner = Planner.coerce(planner)
         self._server = None
@@ -161,3 +170,8 @@ class PathSession:
     @property
     def cache(self) -> Optional[SharedPathCache]:
         return self.engine.cache
+
+    @property
+    def kernel_backend(self) -> str:
+        """The engine's resolved kernel backend ("pallas"|"interpret"|"jnp")."""
+        return self.engine.kernel_backend.value

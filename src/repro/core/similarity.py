@@ -14,12 +14,14 @@ We use the arithmetic mean (the only reading consistent with the footnote's
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .index import QueryIndex
+from ..kernels.registry import resolve_backend
 
 __all__ = ["gamma_matrix", "intersection_matrix", "similarity_matrix"]
 
@@ -45,14 +47,21 @@ def intersection_matrix(gam: jax.Array, chunk: int = 1 << 16) -> jax.Array:
     return out.astype(jnp.int32)
 
 
-def similarity_matrix(index: QueryIndex, backend: str = "jnp") -> np.ndarray:
-    """(Q, Q) float64 μ matrix on host (diagonal = 1)."""
+def similarity_matrix(index: QueryIndex,
+                      backend: Optional[str] = None) -> np.ndarray:
+    """(Q, Q) float64 μ matrix on host (diagonal = 1).
+
+    ``backend`` resolves through the kernel registry (None -> env/auto;
+    unknown names raise ValueError): kernel backends run the packed
+    AND+popcount kernel, ``jnp`` the chunked MXU matmul reference.
+    """
     gf = gamma_matrix(index, reverse=False)
     gr = gamma_matrix(index, reverse=True)
-    if backend == "pallas":
-        from ..kernels.pairwise_popcount import ops as ppops
-        inter_f = np.asarray(ppops.pairwise_intersections(gf))
-        inter_r = np.asarray(ppops.pairwise_intersections(gr))
+    kb = resolve_backend(backend)
+    if kb.uses_kernel:
+        from ..kernels.pairwise_popcount.ops import pairwise_intersections
+        inter_f = np.asarray(pairwise_intersections(gf, backend=kb.value))
+        inter_r = np.asarray(pairwise_intersections(gr, backend=kb.value))
     else:
         inter_f = np.asarray(intersection_matrix(gf))
         inter_r = np.asarray(intersection_matrix(gr))

@@ -6,17 +6,22 @@ Each kernel package ships three modules:
                "interpret" | "jnp"); models/engine call these
   ref.py    -- pure-jnp oracle used for validation and as the jnp backend
 
+Backend selection is centralized in :mod:`repro.kernels.registry`: a typed
+:class:`~repro.kernels.registry.KernelBackend` enum, auto-resolution
+(``pallas`` on TPU, ``jnp`` elsewhere, ``REPRO_KERNEL_BACKEND`` env
+override) and a per-op dispatch table the ops wrappers register into.
+``resolve_backend`` raises ``ValueError`` on unknown names — there is no
+silent fallback.
+
 This container is CPU-only: tests validate kernel bodies with
 interpret=True against ref.py across shape/dtype sweeps; the dry-run
 lowers the jnp backend (kernels cannot lower for the CPU backend), and the
 BlockSpecs document the VMEM tiling used on real TPU.
 """
-DEFAULT_BACKEND = "jnp"
+from .registry import (KernelBackend, dispatch, register_op,  # noqa: F401
+                       registered_ops, resolve_backend)
 
+DEFAULT_BACKEND = KernelBackend.JNP.value
 
-def resolve_backend(backend):
-    import jax
-    if backend is not None:
-        return backend
-    platform = jax.default_backend()
-    return "pallas" if platform == "tpu" else DEFAULT_BACKEND
+__all__ = ["KernelBackend", "resolve_backend", "register_op", "dispatch",
+           "registered_ops", "DEFAULT_BACKEND"]

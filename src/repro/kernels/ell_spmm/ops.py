@@ -4,15 +4,24 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .. import resolve_backend
+from ..registry import BackendLike, dispatch, register_op
 from .kernel import ell_spmm_pallas
 from .ref import ell_spmm_ref
 
 __all__ = ["ell_aggregate"]
 
 
+register_op(
+    "ell_spmm",
+    pallas=lambda ell, xs, op: ell_spmm_pallas(ell, xs, op=op),
+    interpret=lambda ell, xs, op: ell_spmm_pallas(ell, xs, op=op,
+                                                  interpret=True),
+    jnp=ell_spmm_ref,
+)
+
+
 def ell_aggregate(ell_idx: jax.Array, x: jax.Array, op: str = "sum",
-                  backend: str | None = None) -> jax.Array:
+                  backend: BackendLike = None) -> jax.Array:
     """x: (V, F) node features -> (V, F) aggregated over out-neighbors.
 
     Appends the neutral sentinel row internally (pad index = V).
@@ -20,13 +29,7 @@ def ell_aggregate(ell_idx: jax.Array, x: jax.Array, op: str = "sum",
     neutral = jnp.zeros((1, x.shape[1]), x.dtype) if op == "sum" else \
         jnp.full((1, x.shape[1]), -jnp.inf, x.dtype)
     xs = jnp.concatenate([x, neutral], axis=0)
-    backend = resolve_backend(backend)
-    if backend == "pallas":
-        out = ell_spmm_pallas(ell_idx, xs, op=op)
-    elif backend == "interpret":
-        out = ell_spmm_pallas(ell_idx, xs, op=op, interpret=True)
-    else:
-        out = ell_spmm_ref(ell_idx, xs, op=op)
+    out = dispatch("ell_spmm", backend)(ell_idx, xs, op)
     if op == "max":
         out = jnp.where(jnp.isfinite(out), out, 0.0)
     return out

@@ -8,15 +8,26 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .. import resolve_backend
+from ..registry import BackendLike, dispatch, register_op
 from .kernel import flash_attention_pallas
 from .ref import attention_ref
 
 __all__ = ["gqa_attention"]
 
 
+register_op(
+    "flash_attention",
+    pallas=lambda q, k, v, causal: flash_attention_pallas(q, k, v,
+                                                          causal=causal),
+    interpret=lambda q, k, v, causal: flash_attention_pallas(
+        q, k, v, causal=causal, interpret=True),
+    jnp=lambda q, k, v, causal: attention_ref(q, k, v, causal=causal),
+)
+
+
 def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array,
-                  causal: bool = True, backend: str | None = None) -> jax.Array:
+                  causal: bool = True,
+                  backend: BackendLike = None) -> jax.Array:
     """q: (B, Sq, Hq, Dh); k, v: (B, Skv, Hkv, Dh), Hq % Hkv == 0.
 
     Returns (B, Sq, Hq, Dh).
@@ -30,11 +41,5 @@ def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, Dh)
     kf = k.transpose(0, 2, 1, 3).reshape(B * Hq, -1, Dh)
     vf = v.transpose(0, 2, 1, 3).reshape(B * Hq, -1, Dh)
-    backend = resolve_backend(backend)
-    if backend == "pallas":
-        out = flash_attention_pallas(qf, kf, vf, causal=causal)
-    elif backend == "interpret":
-        out = flash_attention_pallas(qf, kf, vf, causal=causal, interpret=True)
-    else:
-        out = attention_ref(qf, kf, vf, causal=causal)
+    out = dispatch("flash_attention", backend)(qf, kf, vf, causal)
     return out.reshape(B, Hq, Sq, Dh).transpose(0, 2, 1, 3)

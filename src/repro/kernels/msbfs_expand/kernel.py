@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["msbfs_expand_pallas"]
+__all__ = ["msbfs_expand_pallas", "msbfs_step_pallas"]
 
 
 def _kernel(idx_ref, fr_ref, out_ref):
@@ -64,3 +64,79 @@ def msbfs_expand_pallas(ell_idx: jax.Array, frontier: jax.Array,
         out_shape=jax.ShapeDtypeStruct((V, W), jnp.uint32),
         interpret=interpret,
     )(ell_idx, frontier)
+
+
+def _step_kernel(hop, idx_ref, fr_ref, vis_ref, dist_ref,
+                 nf_ref, vo_ref, do_ref):
+    idx = idx_ref[...]                       # (BV, D) int32
+    fr = fr_ref[...]                         # (V+1, BW) uint32
+    D = idx.shape[1]
+
+    def body(d, acc):
+        rows = jax.lax.dynamic_index_in_dim(idx, d, axis=1, keepdims=False)
+        return acc | fr[rows]
+
+    acc = jax.lax.fori_loop(0, D, body, jnp.zeros(nf_ref.shape, jnp.uint32))
+    vis = vis_ref[...]                       # (BV, BW) uint32
+    new = acc & ~vis                         # dedup against the visited set
+    nf_ref[...] = new
+    vo_ref[...] = vis | new
+    # unpack the freshly-set bits (little-endian within a word, matching
+    # ref.pack_bits) and stamp the hop into the distance tile
+    bv, bw = new.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = ((new[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)) != 0
+    do_ref[...] = jnp.where(bits.reshape(bv, bw * 32), jnp.int8(hop),
+                            dist_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("hop", "block_v", "block_w",
+                                             "interpret"))
+def msbfs_step_pallas(ell_idx: jax.Array, frontier: jax.Array,
+                      visited: jax.Array, dist: jax.Array, *, hop: int,
+                      block_v: int = 256, block_w: int = 8,
+                      interpret: bool = False):
+    """One fused MS-BFS level: expand + visited dedup + distance write.
+
+    ell_idx  : (V, D) int32 in-neighbor table (pad = V)
+    frontier : (V+1, W) uint32 packed level-(hop-1) frontier (row V = 0)
+    visited  : (V, W) uint32 packed reached-set (hop-0 seeds included)
+    dist     : (V, W*32) int8 distances, bit (v, w*32+b) <-> word bit
+    hop      : static level being written (the per-k_max loop is unrolled
+               under jit, so this is a compile-time constant)
+
+    Returns (next_frontier (V, W), visited | next (V, W),
+    dist with ``hop`` stamped where a new bit was set) — ONE device
+    dispatch where the segment-op path issues gather + segment_max +
+    mask-mul + where per level.
+
+    Tiling mirrors :func:`msbfs_expand_pallas`; the distance tile is the
+    (BV, BW*32) byte block aligned with the word block, so all three
+    outputs stream through the same grid.
+    """
+    V, D = ell_idx.shape
+    W = frontier.shape[1]
+    bv = min(block_v, V)
+    bw = min(block_w, W)
+    grid = (pl.cdiv(V, bv), pl.cdiv(W, bw))
+    return pl.pallas_call(
+        functools.partial(_step_kernel, hop),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bv, D), lambda i, j: (i, 0)),
+            pl.BlockSpec((V + 1, bw), lambda i, j: (0, j)),
+            pl.BlockSpec((bv, bw), lambda i, j: (i, j)),
+            pl.BlockSpec((bv, bw * 32), lambda i, j: (i, j)),
+        ],
+        out_specs=(
+            pl.BlockSpec((bv, bw), lambda i, j: (i, j)),
+            pl.BlockSpec((bv, bw), lambda i, j: (i, j)),
+            pl.BlockSpec((bv, bw * 32), lambda i, j: (i, j)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((V, W), jnp.uint32),
+            jax.ShapeDtypeStruct((V, W), jnp.uint32),
+            jax.ShapeDtypeStruct((V, W * 32), jnp.int8),
+        ),
+        interpret=interpret,
+    )(ell_idx, frontier, visited, dist)

@@ -1,29 +1,53 @@
-"""Public wrapper: one bit-packed MS-BFS hop with backend switch."""
+"""Public wrappers: packed MS-BFS hop and the fused per-level step."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from .. import resolve_backend
-from .kernel import msbfs_expand_pallas
-from .ref import msbfs_expand_ref, pack_bits, unpack_bits
+from ..registry import BackendLike, dispatch, register_op
+from .kernel import msbfs_expand_pallas, msbfs_step_pallas
+from .ref import msbfs_expand_ref, msbfs_step_ref, pack_bits, unpack_bits
 
-__all__ = ["msbfs_hop_packed", "pack_bits", "unpack_bits"]
+__all__ = ["msbfs_hop_packed", "msbfs_step", "pack_bits", "unpack_bits"]
+
+
+register_op(
+    "msbfs_expand",
+    pallas=msbfs_expand_pallas,
+    interpret=lambda ell, fw: msbfs_expand_pallas(ell, fw, interpret=True),
+    jnp=msbfs_expand_ref,
+)
+
+register_op(
+    "msbfs_step",
+    pallas=lambda ell, fw, vis, dist, hop: msbfs_step_pallas(
+        ell, fw, vis, dist, hop=hop),
+    interpret=lambda ell, fw, vis, dist, hop: msbfs_step_pallas(
+        ell, fw, vis, dist, hop=hop, interpret=True),
+    jnp=msbfs_step_ref,
+)
 
 
 def msbfs_hop_packed(ell_idx: jax.Array, frontier_words: jax.Array,
-                     backend: str | None = None) -> jax.Array:
+                     backend: BackendLike = None) -> jax.Array:
     """frontier_words: (V+1, W) uint32 with sentinel row V zeroed.
 
     Returns (V+1, W) next frontier (sentinel row re-zeroed).
     """
-    backend = resolve_backend(backend)
     fw = frontier_words.at[-1].set(jnp.uint32(0))
-    if backend == "pallas":
-        nxt = msbfs_expand_pallas(ell_idx, fw)
-    elif backend == "interpret":
-        nxt = msbfs_expand_pallas(ell_idx, fw, interpret=True)
-    else:
-        nxt = msbfs_expand_ref(ell_idx, fw)
+    nxt = dispatch("msbfs_expand", backend)(ell_idx, fw)
     zero = jnp.zeros((1, nxt.shape[1]), jnp.uint32)
     return jnp.concatenate([nxt, zero], axis=0)
+
+
+def msbfs_step(ell_idx: jax.Array, frontier: jax.Array, visited: jax.Array,
+               dist: jax.Array, hop: int,
+               backend: BackendLike = None):
+    """One fused MS-BFS level (expand + dedup + distance write).
+
+    See :func:`~repro.kernels.msbfs_expand.kernel.msbfs_step_pallas` for
+    shapes; ``hop`` must be a static Python int (the engine unrolls the
+    k_max loop under jit). Returns (next_frontier, visited, dist).
+    """
+    return dispatch("msbfs_step", backend)(ell_idx, frontier, visited,
+                                           dist, hop)

@@ -4,7 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["msbfs_expand_ref", "pack_bits", "unpack_bits"]
+__all__ = ["msbfs_expand_ref", "msbfs_step_ref", "pack_bits", "unpack_bits"]
 
 
 def pack_bits(bits: jax.Array) -> jax.Array:
@@ -30,3 +30,18 @@ def msbfs_expand_ref(ell_idx: jax.Array, frontier: jax.Array) -> jax.Array:
     """OR-gather over padded ELL rows: next[v, w] = OR_d frontier[idx[v,d], w]."""
     gathered = frontier[ell_idx]               # (V, D, W)
     return jax.lax.reduce(gathered, jnp.uint32(0), jax.lax.bitwise_or, (1,))
+
+
+def msbfs_step_ref(ell_idx: jax.Array, frontier: jax.Array,
+                   visited: jax.Array, dist: jax.Array, hop: int):
+    """jnp twin of the fused step: expand, dedup vs visited, stamp hop.
+
+    Shapes as :func:`~repro.kernels.msbfs_expand.kernel.msbfs_step_pallas`.
+    """
+    acc = msbfs_expand_ref(ell_idx, frontier)            # (V, W)
+    new = acc & ~visited
+    V, W = new.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = ((new[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)) != 0
+    dist = jnp.where(bits.reshape(V, W * 32), jnp.int8(hop), dist)
+    return new, visited | new, dist

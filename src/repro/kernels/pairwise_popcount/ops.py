@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import jax
 
-from .. import resolve_backend
+from ..registry import BackendLike, dispatch, register_op
 from ..msbfs_expand.ref import pack_bits
 from .kernel import pairwise_popcount_pallas
 from .ref import pairwise_popcount_ref, intersections_bool_ref
@@ -11,13 +11,16 @@ from .ref import pairwise_popcount_ref, intersections_bool_ref
 __all__ = ["pairwise_intersections"]
 
 
+register_op(
+    "pairwise_popcount",
+    pallas=lambda bits: pairwise_popcount_pallas(pack_bits(bits)),
+    interpret=lambda bits: pairwise_popcount_pallas(pack_bits(bits),
+                                                    interpret=True),
+    jnp=intersections_bool_ref,
+)
+
+
 def pairwise_intersections(gamma_bits: jax.Array,
-                           backend: str | None = None) -> jax.Array:
+                           backend: BackendLike = None) -> jax.Array:
     """gamma_bits: (Q, V) bool -> (Q, Q) int32 intersection sizes."""
-    backend = resolve_backend(backend)
-    if backend == "jnp":
-        return intersections_bool_ref(gamma_bits)
-    words = pack_bits(gamma_bits)
-    if backend == "pallas":
-        return pairwise_popcount_pallas(words)
-    return pairwise_popcount_pallas(words, interpret=True)
+    return dispatch("pairwise_popcount", backend)(gamma_bits)

@@ -24,7 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["path_overlap_pallas"]
+__all__ = ["path_overlap_pallas", "rowwise_overlap_pallas",
+           "path_member_pallas"]
 
 
 def _kernel(a_ref, b_ref, out_ref):
@@ -55,3 +56,78 @@ def path_overlap_pallas(a_verts: jax.Array, b_verts: jax.Array,
         out_shape=jax.ShapeDtypeStruct((NA, NB), jnp.int32),
         interpret=interpret,
     )(a_verts, b_verts)
+
+
+def _rowwise_kernel(a_ref, b_ref, out_ref):
+    a = a_ref[...]                            # (BN, LA) int32
+    b = b_ref[...]                            # (BN, LB) int32
+    eq = (a[:, :, None] == b[:, None, :]) & (a >= 0)[:, :, None]
+    out_ref[...] = jnp.sum(eq.astype(jnp.int32), axis=(1, 2),
+                           keepdims=True)[:, :, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def rowwise_overlap_pallas(a_verts: jax.Array, b_verts: jax.Array,
+                           *, block_n: int = 1024,
+                           interpret: bool = False) -> jax.Array:
+    """Row-aligned overlap counts for already-enumerated join pairs:
+
+        out[i] = #{ (p, q) : A[i, p] == B[i, q], A[i, p] >= 0 }
+
+    The join hot loop's shape: the searchsorted bucket enumeration (or the
+    cross-join index split) has already paired row i of A with row i of B,
+    so the dense (NA, NB) product of :func:`path_overlap_pallas` would be
+    quadratic waste — this kernel fuses the per-pair simple-path check of
+    one assembled join into a single dispatch over the pair buffer.
+
+    a_verts: (N, LA), b_verts: (N, LB) int32 (pad -1) -> (N, 1) int32.
+    """
+    N, LA = a_verts.shape
+    LB = b_verts.shape[1]
+    bn = min(block_n, N)
+    return pl.pallas_call(
+        _rowwise_kernel,
+        grid=(pl.cdiv(N, bn),),
+        in_specs=[
+            pl.BlockSpec((bn, LA), lambda i: (i, 0)),
+            pl.BlockSpec((bn, LB), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, 1), jnp.int32),
+        interpret=interpret,
+    )(a_verts, b_verts)
+
+
+def _member_kernel(v_ref, c_ref, out_ref):
+    v = v_ref[...]                            # (BN, L)  path prefixes
+    c = c_ref[...]                            # (BN, D)  candidate vertices
+    eq = (c[:, :, None] == v[:, None, :])
+    out_ref[...] = jnp.sum(eq.astype(jnp.int32), axis=2)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def path_member_pallas(verts: jax.Array, cand: jax.Array,
+                       *, block_n: int = 512,
+                       interpret: bool = False) -> jax.Array:
+    """Per-candidate membership counts against the owning path prefix:
+
+        out[i, d] = #{ p : cand[i, d] == verts[i, p] }
+
+    The expand superstep's duplicate-vertex mask — every frontier path's D
+    ELL neighbor candidates checked against its own L-vertex prefix in one
+    dispatch. verts: (N, L), cand: (N, D) int32 -> (N, D) int32.
+    """
+    N, L = verts.shape
+    D = cand.shape[1]
+    bn = min(block_n, N)
+    return pl.pallas_call(
+        _member_kernel,
+        grid=(pl.cdiv(N, bn),),
+        in_specs=[
+            pl.BlockSpec((bn, L), lambda i: (i, 0)),
+            pl.BlockSpec((bn, D), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, D), jnp.int32),
+        interpret=interpret,
+    )(verts, cand)

@@ -1,28 +1,59 @@
-"""Public wrapper: join-validity matrices for ⊕ and splice joins."""
+"""Public wrappers: join-validity matrices for ⊕ and splice joins."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
-from .. import resolve_backend
-from .kernel import path_overlap_pallas
-from .ref import path_overlap_ref
+from ..registry import BackendLike, dispatch, register_op
+from .kernel import (path_member_pallas, path_overlap_pallas,
+                     rowwise_overlap_pallas)
+from .ref import path_member_ref, path_overlap_ref, rowwise_overlap_ref
 
-__all__ = ["path_overlap", "keyed_join_valid", "splice_join_valid"]
+__all__ = ["path_overlap", "rowwise_overlap", "path_member",
+           "keyed_join_valid", "splice_join_valid"]
+
+
+register_op(
+    "path_overlap",
+    pallas=path_overlap_pallas,
+    interpret=lambda a, b: path_overlap_pallas(a, b, interpret=True),
+    jnp=path_overlap_ref,
+)
+
+register_op(
+    "rowwise_overlap",
+    pallas=lambda a, b: rowwise_overlap_pallas(a, b)[:, 0],
+    interpret=lambda a, b: rowwise_overlap_pallas(a, b, interpret=True)[:, 0],
+    jnp=rowwise_overlap_ref,
+)
+
+register_op(
+    "path_member",
+    pallas=path_member_pallas,
+    interpret=lambda v, c: path_member_pallas(v, c, interpret=True),
+    jnp=path_member_ref,
+)
 
 
 def path_overlap(a_verts: jax.Array, b_verts: jax.Array,
-                 backend: str | None = None) -> jax.Array:
-    backend = resolve_backend(backend)
-    if backend == "pallas":
-        return path_overlap_pallas(a_verts, b_verts)
-    if backend == "interpret":
-        return path_overlap_pallas(a_verts, b_verts, interpret=True)
-    return path_overlap_ref(a_verts, b_verts)
+                 backend: BackendLike = None) -> jax.Array:
+    """All-pairs shared-vertex counts: (NA, LA) x (NB, LB) -> (NA, NB)."""
+    return dispatch("path_overlap", backend)(a_verts, b_verts)
+
+
+def rowwise_overlap(a_verts: jax.Array, b_verts: jax.Array,
+                    backend: BackendLike = None) -> jax.Array:
+    """Row-aligned shared-vertex counts: (N, LA) x (N, LB) -> (N,)."""
+    return dispatch("rowwise_overlap", backend)(a_verts, b_verts)
+
+
+def path_member(verts: jax.Array, cand: jax.Array,
+                backend: BackendLike = None) -> jax.Array:
+    """(N, L) prefixes x (N, D) candidates -> (N, D) bool membership."""
+    return dispatch("path_member", backend)(verts, cand) > 0
 
 
 def keyed_join_valid(a_verts: jax.Array, a_col: int, b_verts: jax.Array,
-                     b_col: int, backend: str | None = None) -> jax.Array:
+                     b_col: int, backend: BackendLike = None) -> jax.Array:
     """(NA, NB) bool: last vertices match and it is the only shared vertex."""
     ov = path_overlap(a_verts[:, :a_col + 1], b_verts[:, :b_col + 1], backend)
     key = a_verts[:, a_col][:, None] == b_verts[:, b_col][None, :]
@@ -31,7 +62,7 @@ def keyed_join_valid(a_verts: jax.Array, a_col: int, b_verts: jax.Array,
 
 
 def splice_join_valid(p_verts: jax.Array, p_col: int, c_verts: jax.Array,
-                      c_col: int, backend: str | None = None) -> jax.Array:
+                      c_col: int, backend: BackendLike = None) -> jax.Array:
     """(NP, NC) bool: prefix and cached suffix share no vertex."""
     ov = path_overlap(p_verts[:, :p_col + 1], c_verts[:, :c_col + 1], backend)
     valid_p = (p_verts[:, 0] >= 0)[:, None]

@@ -4,10 +4,23 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["path_overlap_ref"]
+__all__ = ["path_overlap_ref", "rowwise_overlap_ref", "path_member_ref"]
 
 
 def path_overlap_ref(a_verts: jax.Array, b_verts: jax.Array) -> jax.Array:
     eq = (a_verts[:, None, :, None] == b_verts[None, :, None, :])
     eq = eq & (a_verts >= 0)[:, None, :, None]
     return jnp.sum(eq.astype(jnp.int32), axis=(2, 3))
+
+
+def rowwise_overlap_ref(a_verts: jax.Array, b_verts: jax.Array) -> jax.Array:
+    """out[i] = #{(p, q): A[i, p] == B[i, q], A[i, p] >= 0} (row-aligned)."""
+    eq = (a_verts[:, :, None] == b_verts[:, None, :])
+    eq = eq & (a_verts >= 0)[:, :, None]
+    return jnp.sum(eq.astype(jnp.int32), axis=(1, 2))
+
+
+def path_member_ref(verts: jax.Array, cand: jax.Array) -> jax.Array:
+    """out[i, d] = #{p: cand[i, d] == verts[i, p]} (per-row membership)."""
+    eq = (cand[:, :, None] == verts[:, None, :])
+    return jnp.sum(eq.astype(jnp.int32), axis=2)

@@ -15,7 +15,7 @@ from __future__ import annotations
 import json
 import re
 
-__all__ = ["analyze_hlo"]
+__all__ = ["analyze_hlo", "count_entry_ops"]
 
 DT = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
       "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
@@ -44,6 +44,37 @@ def _result_part(rhs: str) -> str:
     """The result type prefix of an op line (before the op name + '(')."""
     i = rhs.find("(")
     return rhs[:i] if i > 0 else rhs
+
+
+# bookkeeping ops that are not device work: excluded from entry-op counts
+_NON_WORK_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                 "bitcast", "after-all", "token"}
+_OP_NAME = re.compile(r"=\s*(?:\(?[\w\[\],{}/* ]*?\)?\s*)?([a-z][\w\-]*)\(")
+
+
+def count_entry_ops(hlo: str) -> int:
+    """Number of *work* ops in the ENTRY computation of an HLO module —
+    a compiled-dispatch-count proxy (each fusion counts once; parameters,
+    constants and tuple plumbing are excluded). Used by kernels_bench to
+    compare the per-level op footprint of the jnp reference arm against
+    the fused kernel arm's single dispatch.
+    """
+    in_entry = False
+    count = 0
+    for line in hlo.splitlines():
+        if not line:
+            continue
+        if not line.startswith(" "):
+            if in_entry:          # entry body ended at the next header
+                break
+            in_entry = line.startswith("ENTRY") and "{" in line
+            continue
+        if not in_entry:
+            continue
+        m = _OP_NAME.search(line)
+        if m and m.group(1) not in _NON_WORK_OPS:
+            count += 1
+    return count
 
 
 def analyze_hlo(hlo: str) -> dict:

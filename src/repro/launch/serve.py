@@ -221,8 +221,9 @@ class StreamingServer:
         t0 = time.perf_counter()
         steals_before = self.sched.steals
 
-        index = build_index(self.engine.dg, [q.key for q in queries])
-        mu = similarity_matrix(index, backend=self.engine.cfg.backend)
+        index = build_index(self.engine.dg, [q.key for q in queries],
+                            backend=self.engine.kernel_backend.value)
+        mu = similarity_matrix(index, backend=self.engine.kernel_backend.value)
         bias = warm_cluster_bias(self.engine, queries, self.warm_bias_eps)
         # balance_clusters must act HERE, not just inside engine.run —
         # the engine keeps an explicitly passed clustering verbatim, so a
@@ -290,6 +291,7 @@ class StreamingServer:
         Q = len(queries)
         self.batch_log.append({
             "wall_s": wall, "n_queries": Q, "n_clusters": len(clusters),
+            "kernel_backend": self.engine.kernel_backend.value,
             "steals": self.sched.steals - steals_before,
             "warm_biased": bias is not None,
             "mu_mean": float((mu.sum() - Q) / max(Q * (Q - 1), 1)),
