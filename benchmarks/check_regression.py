@@ -120,6 +120,20 @@ def check_kernels(current: dict, baseline: dict | None) -> None:
                 f"{base_ref}")
 
 
+def check_static(budgets: Path | None) -> None:
+    """Structural gate over the committed dispatch budgets: run the layer-2
+    jaxpr audit (repro.analysis) — every hot function must trace without
+    host callbacks, stay within its DISPATCH_BUDGETS.json eqn budget, and
+    keep the fused kernels at their committed dispatches per level."""
+    from repro.analysis import run_audit
+    report = run_audit(budgets)
+    for f in report.violations:
+        _fail(f.render())
+    if report.ok:
+        _ok(f"jaxpr audit clean: {report.n_functions} hot function(s) "
+            f"within committed dispatch budgets")
+
+
 def check_sharded(current: dict, min_speedup: float) -> None:
     if not current.get("equal", False):
         _fail("sharded results are NOT equal to single-device")
@@ -163,10 +177,17 @@ def main() -> None:
     ap.add_argument("--kernels-baseline", type=Path, default=None,
                     help="committed BENCH_kernels baseline json (optional; "
                          "adds the fused-vs-committed-jnp dispatch gate)")
+    ap.add_argument("--static", action="store_true",
+                    help="run the repro.analysis jaxpr audit against the "
+                         "committed dispatch budgets")
+    ap.add_argument("--static-budgets", type=Path, default=None,
+                    help="DISPATCH_BUDGETS.json path (default: "
+                         "benchmarks/baselines/DISPATCH_BUDGETS.json)")
     args = ap.parse_args()
-    if args.current is None and args.sharded is None and args.kernels is None:
-        ap.error("nothing to check: pass --current, --sharded and/or "
-                 "--kernels")
+    if (args.current is None and args.sharded is None
+            and args.kernels is None and not args.static):
+        ap.error("nothing to check: pass --current, --sharded, --kernels "
+                 "and/or --static")
 
     if args.current is not None:
         if args.baseline is None:
@@ -186,6 +207,9 @@ def main() -> None:
         base = (json.loads(args.kernels_baseline.read_text())
                 if args.kernels_baseline else None)
         check_kernels(json.loads(args.kernels.read_text()), base)
+    if args.static:
+        print("static: jaxpr audit vs committed dispatch budgets")
+        check_static(args.static_budgets)
     if FAILURES:
         sys.exit(f"{len(FAILURES)} regression check(s) failed")
     print("all regression checks passed")

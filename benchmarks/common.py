@@ -8,9 +8,7 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
-from repro.core import BatchPathEngine, EngineConfig
+from repro.core import BatchPathEngine
 from repro.core import generators
 
 RESULTS: list[dict] = []

@@ -5,8 +5,6 @@ rises past a turning point (over-merged clusters share too little).
 """
 from __future__ import annotations
 
-import dataclasses
-
 from repro.core import BatchPathEngine, EngineConfig
 from repro.core import generators
 from .common import default_graph, record, time_planner

@@ -37,7 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.launch.hlo_analysis import count_entry_ops
+from repro.launch.hlo_analysis import count_entry_ops, count_eqns
 from repro.launch.roofline import HW
 
 from .common import record
@@ -65,22 +65,8 @@ def _op_row(name: str, dt: float, nbytes: float, derived: str = "") -> dict:
             "roofline_frac": frac}
 
 
-def _eqn_count(jaxpr) -> int:
-    """Equations in a jaxpr, recursing into sub-jaxprs (pjit/scan/cond)
-    but treating a pallas_call as ONE equation — its body is a single
-    fused device dispatch, which is exactly what we are counting."""
-    total = 0
-    for eqn in jaxpr.eqns:
-        total += 1
-        if eqn.primitive.name == "pallas_call":
-            continue
-        for val in eqn.params.values():
-            for v in (val if isinstance(val, (tuple, list)) else [val]):
-                if hasattr(v, "jaxpr"):          # ClosedJaxpr
-                    total += _eqn_count(v.jaxpr)
-                elif hasattr(v, "eqns"):         # raw Jaxpr
-                    total += _eqn_count(v)
-    return total
+# eqn accounting lives in launch.hlo_analysis.count_eqns, shared with the
+# repro.analysis jaxpr audit so bench numbers and budget gates agree
 
 
 def _dispatch_counts(n: int, D: int, S: int, seed: int = 0) -> dict:
@@ -122,8 +108,8 @@ def _dispatch_counts(n: int, D: int, S: int, seed: int = 0) -> dict:
                              backend="interpret")
         return jnp.concatenate([f, jnp.zeros((1, W), jnp.uint32)]), v, d
 
-    jnp_eqns = _eqn_count(jax.make_jaxpr(level_jnp)(frontier8, dist8).jaxpr)
-    fused_eqns = _eqn_count(
+    jnp_eqns = count_eqns(jax.make_jaxpr(level_jnp)(frontier8, dist8).jaxpr)
+    fused_eqns = count_eqns(
         jax.make_jaxpr(level_fused)(fr_w, vis_w, dist_w).jaxpr)
     # compiled footprint of the jnp arm (the fused arm's Pallas kernel
     # cannot lower off-TPU; its dispatch count IS the jaxpr count)

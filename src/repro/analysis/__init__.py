@@ -1,0 +1,36 @@
+"""Two-layer static analysis of the hot query path.
+
+Layer 1 (:mod:`.astlint`) lints the source tree for trace-invariant
+violations (RPL001-RPL005: host syncs in jit-reachable code, kernel math
+bypassing the registry, missing static declarations, Python loops over
+device arrays, raw pow2 shape math). Layer 2 (:mod:`.jaxpr_audit`)
+abstractly traces the hot-function manifest per backend and checks the
+jaxprs themselves: no host callbacks, per-level dispatch counts within the
+committed budgets, int8 bounds proven, no value-dependent retraces, and
+full registry-op coverage.
+
+CLI: ``python -m repro.analysis --all`` (the CI ``lint-deep`` job); exits
+nonzero iff any unwaived finding remains.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Optional
+
+from .astlint import lint_source, lint_tree
+from .jaxpr_audit import measure_budgets, run_audit
+from .report import AnalysisReport, Finding
+
+__all__ = ["AnalysisReport", "Finding", "lint_source", "lint_tree",
+           "run_audit", "run_all", "measure_budgets"]
+
+
+def run_all(root: Optional[Path] = None,
+            budgets_path: Optional[Path] = None) -> AnalysisReport:
+    """Run both layers over ``root`` (default: the installed ``repro``
+    package tree) and merge into one report."""
+    if root is None:
+        root = Path(__file__).resolve().parents[1]
+    report = lint_tree(Path(root))
+    report.extend(run_audit(budgets_path))
+    return report

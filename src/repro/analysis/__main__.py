@@ -1,0 +1,72 @@
+"""CLI entry point: ``python -m repro.analysis``.
+
+Modes (default ``--all``):
+  --lint            layer 1 only (AST lint, no JAX import needed)
+  --audit           layer 2 only (jaxpr trace audit)
+  --all             both layers, one merged report
+  --write-budgets   measure the manifest and rewrite the committed
+                    DISPATCH_BUDGETS.json baseline (then exits 0)
+
+Exit status: 0 iff no unwaived finding.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--all", action="store_true",
+                      help="run both layers (default)")
+    mode.add_argument("--lint", action="store_true",
+                      help="layer 1 AST lint only")
+    mode.add_argument("--audit", action="store_true",
+                      help="layer 2 jaxpr audit only")
+    mode.add_argument("--write-budgets", action="store_true",
+                      help="measure and rewrite the dispatch-budget baseline")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="source tree to lint (default: the repro package)")
+    ap.add_argument("--budgets", type=Path, default=None,
+                    help="DISPATCH_BUDGETS.json path (default: "
+                         "benchmarks/baselines/DISPATCH_BUDGETS.json)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the report as JSON instead of text")
+    args = ap.parse_args(argv)
+
+    if args.write_budgets:
+        from .jaxpr_audit import DEFAULT_BUDGETS_PATH, measure_budgets
+        path = args.budgets or DEFAULT_BUDGETS_PATH
+        budgets = {
+            "_comment": "Committed per-backend dispatch budgets for the "
+                        "hot-function manifest (jaxpr eqns; a pallas_call "
+                        "counts as one eqn). Regenerate with `python -m "
+                        "repro.analysis --write-budgets` and justify any "
+                        "increase in the PR.",
+        }
+        budgets.update(measure_budgets())
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(budgets, indent=1, sort_keys=True) + "\n")
+        print(f"wrote {path}")
+        return 0
+
+    if args.lint:
+        from .astlint import lint_tree
+        root = args.root or Path(__file__).resolve().parents[1]
+        report = lint_tree(root)
+    elif args.audit:
+        from .jaxpr_audit import run_audit
+        report = run_audit(args.budgets)
+    else:
+        from . import run_all
+        report = run_all(args.root, args.budgets)
+
+    print(report.to_json() if args.json else report.render())
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,379 @@
+"""Layer 1: repo-specific AST lint over ``src/repro/``.
+
+Implements the RPL rules from :mod:`repro.analysis.rules`. Scope:
+
+* RPL001/RPL004 apply inside *jit-reachable* code of the hot modules
+  (``rules.HOT_MODULE_PATTERNS``): under ``kernels/`` every function is
+  hot (ref/kernel bodies always execute inside a trace); in the core
+  modules reachability is computed as the transitive closure of
+  same-module calls from functions carrying a ``jax.jit`` decorator
+  (``@jax.jit``, ``@partial(jax.jit, ...)``) or wrapped via
+  ``name = jax.jit(fn)``.
+* RPL002 applies everywhere: importing a kernel arm module
+  (``kernels.<op>.ref`` / ``.kernel``) from outside its own package, or
+  calling a ``*_ref``/``*_pallas`` symbol outside ``ref.py``/
+  ``kernel.py`` and outside a ``register_op(...)`` registration call.
+* RPL003 applies to every jitted function: params named in
+  ``rules.STATIC_SHAPE_PARAMS`` must be listed in ``static_argnames``.
+* RPL005 applies everywhere except ``core/graph.py`` (the blessed
+  definition site of ``pow2_ceil``/``pad_edge_list``).
+
+Waivers (``# repro-lint: waive[RULE] reason``) are honoured on the
+finding's line or the line directly above.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from .report import AnalysisReport, Finding
+from .rules import STATIC_SHAPE_PARAMS, is_hot_module, parse_waivers
+
+__all__ = ["lint_source", "lint_tree"]
+
+_JIT_NAMES = {"jax.jit", "jit"}
+_PARTIAL_NAMES = {"partial", "functools.partial"}
+_HOST_SYNC_CALLS = {
+    "jax.device_get", "device_get",
+    "np.asarray", "np.array", "numpy.asarray", "numpy.array",
+    "onp.asarray", "onp.array",
+}
+_CAST_NAMES = {"int", "float", "bool"}
+_DEVICE_PRODUCERS = ("jnp.", "jax.numpy.", "lax.", "jax.lax.", "dispatch")
+
+
+def _dotted(node: ast.expr) -> Optional[str]:
+    if isinstance(node, ast.Attribute):
+        base = _dotted(node.value)
+        return f"{base}.{node.attr}" if base else None
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _const_str_seq(node: ast.expr) -> List[str]:
+    """Extract static_argnames values: 'x', ('x','y'), ['x','y']."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str)]
+    return []
+
+
+@dataclasses.dataclass
+class _JitSite:
+    fn: ast.FunctionDef
+    static: Set[str]
+    lineno: int
+
+
+def _jit_decorator_info(dec: ast.expr) -> Optional[Set[str]]:
+    """Return the declared static_argnames set if ``dec`` is a jit
+    decorator, else None. A bare ``@jax.jit`` yields an empty set."""
+    if _dotted(dec) in _JIT_NAMES:
+        return set()
+    if isinstance(dec, ast.Call):
+        fn = _dotted(dec.func)
+        if fn in _JIT_NAMES:
+            pass
+        elif fn in _PARTIAL_NAMES and dec.args and \
+                _dotted(dec.args[0]) in _JIT_NAMES:
+            pass
+        else:
+            return None
+        static: Set[str] = set()
+        for kw in dec.keywords:
+            if kw.arg in ("static_argnames", "static_argnums"):
+                static.update(_const_str_seq(kw.value))
+        return static
+    return None
+
+
+def _param_names(fn: ast.FunctionDef) -> List[str]:
+    a = fn.args
+    return [p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)]
+
+
+class _ModuleIndex:
+    """Function table + jit roots + same-module call graph."""
+
+    def __init__(self, tree: ast.Module):
+        self.functions: Dict[str, ast.FunctionDef] = {}
+        self.jit_sites: List[_JitSite] = []
+        roots: Set[str] = set()
+
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.functions.setdefault(node.name, node)
+                for dec in node.decorator_list:
+                    static = _jit_decorator_info(dec)
+                    if static is not None:
+                        self.jit_sites.append(
+                            _JitSite(node, static, node.lineno))
+                        roots.add(node.name)
+            elif isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Call) and \
+                    _dotted(node.value.func) in _JIT_NAMES:
+                # name = jax.jit(fn, static_argnames=...)
+                args = node.value.args
+                if args and isinstance(args[0], ast.Name):
+                    roots.add(args[0].id)
+                    static: Set[str] = set()
+                    for kw in node.value.keywords:
+                        if kw.arg in ("static_argnames", "static_argnums"):
+                            static.update(_const_str_seq(kw.value))
+                    target = self.functions.get(args[0].id)
+                    if target is not None:
+                        self.jit_sites.append(
+                            _JitSite(target, static, node.lineno))
+
+        self.reachable = self._closure(roots)
+
+    def _closure(self, roots: Set[str]) -> Set[str]:
+        seen = set()
+        frontier = [r for r in roots if r in self.functions]
+        while frontier:
+            name = frontier.pop()
+            if name in seen:
+                continue
+            seen.add(name)
+            for node in ast.walk(self.functions[name]):
+                if isinstance(node, ast.Call):
+                    callee = None
+                    if isinstance(node.func, ast.Name):
+                        callee = node.func.id
+                    elif isinstance(node.func, ast.Attribute):
+                        callee = node.func.attr
+                    if callee in self.functions and callee not in seen:
+                        frontier.append(callee)
+        return seen
+
+
+def _is_static_scalar(node: ast.expr) -> bool:
+    """Heuristic: expression that is a host scalar, not a device array —
+    bare names (static args), constants, len(), and shape/ndim/dtype
+    attribute chains."""
+    if isinstance(node, (ast.Name, ast.Constant)):
+        return True
+    if isinstance(node, ast.Call) and _dotted(node.func) == "len":
+        return True
+    if isinstance(node, ast.BinOp):
+        return _is_static_scalar(node.left) and _is_static_scalar(node.right)
+    d = _dotted(node) or ""
+    if any(part in ("shape", "ndim", "dtype", "size")
+           for part in d.split(".")):
+        return True
+    if isinstance(node, ast.Subscript):  # x.shape[0]
+        return _is_static_scalar(node.value)
+    return False
+
+
+class _RuleVisitor(ast.NodeVisitor):
+    """Single-pass visitor collecting raw (rule, line, message) hits."""
+
+    def __init__(self, relpath: str, index: _ModuleIndex, *,
+                 hot: bool, in_kernels: bool, is_ops: bool,
+                 is_arm: bool, is_graph: bool):
+        self.relpath = relpath
+        self.index = index
+        self.hot = hot                  # RPL001/004 scope
+        self.in_kernels = in_kernels    # all fns hot
+        self.is_ops = is_ops            # kernels/*/ops.py
+        self.is_arm = is_arm            # ref.py / kernel.py (RPL002 exempt)
+        self.is_graph = is_graph        # core/graph.py (RPL005 exempt)
+        self.hits: List[Tuple[str, int, str]] = []
+        self._fn_stack: List[str] = []
+        self._register_depth = 0
+        self._device_names: List[Set[str]] = []
+
+    def _flag(self, rule: str, node: ast.AST, msg: str) -> None:
+        self.hits.append((rule, getattr(node, "lineno", 0), msg))
+
+    def _in_hot_fn(self) -> bool:
+        if not self.hot:
+            return False
+        if self.in_kernels:
+            return bool(self._fn_stack)
+        return any(name in self.index.reachable for name in self._fn_stack)
+
+    # -- scope tracking ------------------------------------------------
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._fn_stack.append(node.name)
+        self._device_names.append(set())
+        self.generic_visit(node)
+        self._device_names.pop()
+        self._fn_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    # -- RPL002: arm imports -------------------------------------------
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if not self.is_arm:
+            mod = node.module or ""
+            tail = mod.rsplit(".", 1)[-1]
+            if tail in ("ref", "kernel"):
+                # `from .ref import ...` inside the op's own package
+                # (level==1, bare module name) is the registration
+                # mechanism; anything deeper crosses package lines.
+                same_pkg = node.level == 1 and mod in ("ref", "kernel")
+                if not same_pkg:
+                    self._flag(
+                        "RPL002", node,
+                        f"import from kernel arm module '{mod}' bypasses "
+                        f"the registry — import the dispatching wrapper "
+                        f"from the op's ops.py instead")
+        self.generic_visit(node)
+
+    # -- calls: RPL001 + RPL002 ----------------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        dotted = _dotted(node.func) or ""
+        name = dotted.rsplit(".", 1)[-1]
+
+        if not self.is_arm and self._register_depth == 0 and \
+                (name.endswith("_ref") or name.endswith("_pallas")):
+            self._flag(
+                "RPL002", node,
+                f"direct call to kernel arm '{name}' — route through "
+                f"registry.dispatch (ops.py wrapper)")
+
+        if self._in_hot_fn():
+            if isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "item":
+                self._flag("RPL001", node,
+                           ".item() forces a device->host sync")
+            elif dotted in _HOST_SYNC_CALLS:
+                self._flag("RPL001", node,
+                           f"{dotted}() transfers the array to host")
+            elif dotted in _CAST_NAMES and len(node.args) == 1 and \
+                    not _is_static_scalar(node.args[0]):
+                self._flag(
+                    "RPL001", node,
+                    f"{dotted}() on a computed value may force a host "
+                    f"sync on a traced array")
+
+        if name == "register_op":
+            self._register_depth += 1
+            self.generic_visit(node)
+            self._register_depth -= 1
+            return
+        self.generic_visit(node)
+
+    # -- RPL004: loops over device arrays ------------------------------
+    def visit_Assign(self, node: ast.Assign) -> None:
+        if self._device_names and isinstance(node.value, ast.Call):
+            d = _dotted(node.value.func) or ""
+            if d.startswith(_DEVICE_PRODUCERS) or d == "dispatch":
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        self._device_names[-1].add(tgt.id)
+        self.generic_visit(node)
+
+    def visit_For(self, node: ast.For) -> None:
+        if self._in_hot_fn():
+            it = node.iter
+            flagged = False
+            if isinstance(it, ast.Call):
+                d = _dotted(it.func) or ""
+                if d.startswith(_DEVICE_PRODUCERS):
+                    flagged = True
+            elif isinstance(it, ast.Name) and self._device_names and \
+                    it.id in self._device_names[-1]:
+                flagged = True
+            if flagged:
+                self._flag(
+                    "RPL004", node,
+                    "Python for-loop over a device array unrolls into the "
+                    "trace (or syncs per element) — use lax.fori_loop/scan "
+                    "or vectorize")
+        self.generic_visit(node)
+
+    # -- RPL005: raw pow2 / parity shape math --------------------------
+    def visit_BinOp(self, node: ast.BinOp) -> None:
+        if not self.is_graph:
+            def const(n: ast.expr) -> Optional[object]:
+                return n.value if isinstance(n, ast.Constant) else None
+
+            if isinstance(node.op, ast.Pow) and const(node.left) == 2 and \
+                    const(node.right) is None:
+                self._flag("RPL005", node,
+                           "raw 2**x shape math — use graph.pow2_ceil")
+            elif isinstance(node.op, ast.LShift) and \
+                    const(node.left) in (1, 2) and \
+                    const(node.right) is None:
+                self._flag("RPL005", node,
+                           "raw 1<<x pow2 math — use graph.pow2_ceil")
+            elif isinstance(node.op, ast.Mod) and const(node.right) == 2 \
+                    and const(node.left) is None:
+                self._flag("RPL005", node,
+                           "raw x%2 parity shape math — use "
+                           "graph.pow2_ceil/pad_edge_list helpers")
+        self.generic_visit(node)
+
+
+def _check_jit_static(index: _ModuleIndex) -> List[Tuple[str, int, str]]:
+    hits: List[Tuple[str, int, str]] = []
+    for site in index.jit_sites:
+        params = set(_param_names(site.fn))
+        missing = sorted((params & STATIC_SHAPE_PARAMS) - site.static)
+        for p in missing:
+            hits.append((
+                "RPL003", site.lineno,
+                f"jitted '{site.fn.name}' takes shape-bearing arg '{p}' "
+                f"but does not declare it in static_argnames"))
+    return hits
+
+
+def lint_source(source: str, relpath: str) -> List[Finding]:
+    """Lint one module's source. ``relpath`` is posix-style relative to
+    the lint root (e.g. ``core/msbfs.py``)."""
+    rel = relpath.replace("\\", "/")
+    waivers, malformed = parse_waivers(source)
+    findings = [Finding("RPL000", rel, line, msg) for line, msg in malformed]
+
+    tree = ast.parse(source)
+    index = _ModuleIndex(tree)
+    parts = rel.split("/")
+    in_kernels = parts[0] == "kernels"
+    visitor = _RuleVisitor(
+        rel, index,
+        hot=is_hot_module(rel),
+        in_kernels=in_kernels,
+        is_ops=in_kernels and parts[-1] == "ops.py",
+        is_arm=in_kernels and parts[-1] in ("ref.py", "kernel.py"),
+        is_graph=rel == "core/graph.py",
+    )
+    visitor.visit(tree)
+
+    for rule, line, msg in visitor.hits + _check_jit_static(index):
+        waiver = waivers.get(line)
+        if waiver and rule in waiver[0]:
+            findings.append(Finding(rule, rel, line, msg,
+                                    waived=True, waiver_reason=waiver[1]))
+        else:
+            findings.append(Finding(rule, rel, line, msg))
+    return findings
+
+
+def lint_tree(root: Path, *,
+              exclude: Sequence[str] = ("__pycache__",)) -> AnalysisReport:
+    """Lint every ``*.py`` under ``root`` (the ``src/repro`` directory)."""
+    root = Path(root)
+    report = AnalysisReport()
+    for path in sorted(root.rglob("*.py")):
+        rel = path.relative_to(root).as_posix()
+        if any(part in exclude for part in path.parts):
+            continue
+        report.n_files += 1
+        try:
+            report.add(lint_source(path.read_text(), rel))
+        except SyntaxError as exc:  # pragma: no cover - tree is importable
+            report.add([Finding("RPL000", rel, exc.lineno or 0,
+                                f"syntax error: {exc.msg}")])
+    return report
+
+
+def iter_rule_ids(findings: Iterable[Finding]) -> Set[str]:
+    return {f.rule for f in findings}

@@ -1,0 +1,125 @@
+"""Rule catalog + waiver parsing for the repro static analyzer.
+
+The RPL rules encode the hot-path contracts PRs 4-6 established (see
+docs/analysis.md for the full catalog with examples):
+
+  RPL001  host-sync calls inside jit-reachable code
+  RPL002  kernel math bypassing ``kernels.registry.dispatch``
+  RPL003  shape-bearing jit arguments not declared static
+  RPL004  Python-level loops over device arrays in jit-reachable code
+  RPL005  raw pow2 shape math not going through ``graph.pow2_ceil``
+
+Waiver syntax (same line, or the line directly above the finding)::
+
+    x = dist.item()  # repro-lint: waive[RPL001] tiny scalar, post-sweep
+
+Multiple rules: ``waive[RPL001,RPL004] reason``. The reason is
+mandatory — a waiver without one is itself a violation (RPL000).
+"""
+from __future__ import annotations
+
+import io
+import re
+import tokenize
+from typing import Dict, List, Tuple
+
+__all__ = [
+    "RULES", "HOT_MODULE_PATTERNS", "STATIC_SHAPE_PARAMS",
+    "WAIVER_RE", "parse_waivers", "is_hot_module",
+]
+
+RULES: Dict[str, str] = {
+    "RPL000": "malformed waiver (missing reason or unknown rule id)",
+    "RPL001": "host sync inside jit-reachable code (.item(), int()/float()/"
+              "bool() on arrays, np.asarray/np.array, jax.device_get)",
+    "RPL002": "kernel math bypassing kernels.registry dispatch (importing or "
+              "calling *_ref/*_pallas arms outside ref.py/kernel.py or "
+              "register_op(...))",
+    "RPL003": "shape-bearing argument of a jitted function not declared in "
+              "static_argnames (forces per-value retrace or traced shapes)",
+    "RPL004": "Python loop over a device array in jit-reachable code "
+              "(unrolls into the trace or forces a host transfer per step)",
+    "RPL005": "raw pow2/parity shape math (2**x, 1<<x, x%2) outside "
+              "graph.pow2_ceil/pad_edge_list (breaks the stable-shape "
+              "bucket contract)",
+}
+
+# Modules where jit-reachability matters for RPL001/RPL004 (relative to
+# the lint root, i.e. src/repro/). kernels/* bodies are all hot; the
+# listed core modules hold every jitted engine sweep.
+HOT_MODULE_PATTERNS: Tuple[str, ...] = (
+    "core/msbfs.py",
+    "core/join.py",
+    "core/enumerate.py",
+    "core/index.py",
+    "kernels/*.py",
+    "kernels/*/*.py",
+)
+
+# Parameter names that carry shapes (or select compiled variants) in this
+# codebase; RPL003 requires them in static_argnames wherever they appear
+# on a jitted function's signature.
+STATIC_SHAPE_PARAMS = frozenset({
+    "n", "k_max", "m_valid", "edge_chunk", "backend",
+    "level", "budget", "out_cap", "out_width", "cap",
+    "col", "a_col", "b_col", "p_col", "c_col", "pair_cap",
+})
+
+WAIVER_RE = re.compile(
+    r"#\s*repro-lint:\s*waive\[(?P<rules>[A-Z0-9,\s]+)\]\s*(?P<reason>.*)$")
+
+
+def is_hot_module(relpath: str) -> bool:
+    """True if ``relpath`` (posix, relative to the lint root) is one of
+    the jit-reachable modules RPL001/RPL004 apply to."""
+    from fnmatch import fnmatch
+    rel = relpath.replace("\\", "/")
+    return any(fnmatch(rel, pat) for pat in HOT_MODULE_PATTERNS)
+
+
+def parse_waivers(source: str) -> Tuple[Dict[int, Tuple[frozenset, str]],
+                                        List[Tuple[int, str]]]:
+    """Scan ``source`` for waiver comments.
+
+    Returns ``(waivers, malformed)``:
+      * ``waivers`` maps *covered* line numbers (the comment's own line
+        and the one below it, so a waiver can sit above a long call) to
+        ``(rule_ids, reason)``.
+      * ``malformed`` lists ``(line, message)`` pairs for waivers with an
+        empty reason or an unknown rule id — surfaced as RPL000.
+    """
+    waivers: Dict[int, Tuple[frozenset, str]] = {}
+    malformed: List[Tuple[int, str]] = []
+    # only genuine COMMENT tokens count — a waiver example quoted in a
+    # docstring must not register (or trip RPL000)
+    comments: List[Tuple[int, str, bool]] = []
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+            if tok.type == tokenize.COMMENT:
+                code_before = tok.line[:tok.start[1]].strip()
+                comments.append((tok.start[0], tok.string,
+                                 not code_before))
+    except tokenize.TokenError:
+        return waivers, malformed
+    for lineno, text, own_line in comments:
+        m = WAIVER_RE.search(text)
+        if not m:
+            continue
+        rules = frozenset(r.strip() for r in m.group("rules").split(",")
+                          if r.strip())
+        reason = m.group("reason").strip()
+        unknown = sorted(r for r in rules if r not in RULES)
+        if unknown:
+            malformed.append(
+                (lineno, f"unknown rule id(s) {unknown} in waiver"))
+            continue
+        if not reason:
+            malformed.append(
+                (lineno, "waiver has no reason — every exception must be "
+                         "documented in-line"))
+            continue
+        waivers[lineno] = (rules, reason)
+        if own_line:
+            # comment-only line: the waiver covers the next code line
+            waivers[lineno + 1] = (rules, reason)
+    return waivers, malformed

@@ -30,13 +30,13 @@ from .cache import SharedPathCache
 from .delta import (AppliedDelta, GraphDelta, apply_delta as _merge_delta,
                     host_set_dist, pow2_ceil as _pow2, update_device_graph)
 from .graph import DeviceGraph, Graph
-from .index import (QueryIndex, build_index, slack_from_dists, walk_counts,
-                    walk_counts_ell)
-from .msbfs import edge_span, msbfs_set_dist, msbfs_set_dist_ell
+from .index import QueryIndex, build_index, walk_counts, walk_counts_ell
+from .msbfs import (K_MAX_INT8, edge_span, msbfs_set_dist,
+                    msbfs_set_dist_ell)
 from ..kernels.registry import resolve_backend
 from .pathset import PathSet, concat, empty, singleton
 from .enumerate import (count_ending_at, expand_level, extract_rows,
-                        select_ending_at)
+                        prune_table, select_ending_at)
 from .join import cross_join, keyed_join, keyed_join_count, sort_by_last
 from .query import (BatchReport, Output, PathQuery, PathsStore, Planner,
                     QueryLike, QueryResult, midpoint_split)
@@ -301,9 +301,16 @@ class BatchPathEngine:
                                         reverse=True)}
         # distances beyond every live radius are never compared, so the
         # pow2-bucketed (larger) k_max is just slack — stable jit shapes
-        # across deltas; msbfs distances are int8, so clamp the bucket at
-        # its documented k_max <= 120 ceiling
-        k_max = min(_pow2(k_max), 120)
+        # across deltas. Clamping the *bucket* to the int8 sweeps' static
+        # ceiling is sound only while the live radius itself fits; a
+        # radius beyond K_MAX_INT8 would silently lose distances, so it
+        # raises here (the sweeps' _check_k_max guard backstops this).
+        if k_max > K_MAX_INT8:
+            raise ValueError(
+                f"live cache radius k_max={k_max} exceeds the int8 MS-BFS "
+                f"ceiling K_MAX_INT8={K_MAX_INT8}; shrink the hop budgets "
+                f"or drop delta_backend='msbfs'")
+        k_max = min(_pow2(k_max), K_MAX_INT8)
         seed = np.zeros(self.g.n + 1, np.int8)
         seed[applied.touched] = 1
         seed = jnp.asarray(seed)
@@ -663,13 +670,15 @@ class BatchPathEngine:
 
     def _run_node_once(self, reverse, source, budget, slack, children,
                        stop_vertex, caps):
-        ell_idx, ell_mask = self.dg.direction(reverse)
+        ell_idx, _ = self.dg.direction(reverse)
         width = budget + 1
         n = self.dg.n
         splice_np = np.full(n + 1, -1, np.int8)
         for (csrc, cb, _) in children:
             splice_np[csrc] = cb
-        splice_vec = jnp.asarray(splice_np)
+        # slack + splice stacked once per node; every expand level then
+        # pays a single fused prune gather (see enumerate.prune_table)
+        prune_tbl = prune_table(slack, jnp.asarray(splice_np))
         stop = jnp.int32(stop_vertex)
 
         pools: list[list[PathSet]] = [[] for _ in range(budget + 1)]
@@ -678,8 +687,8 @@ class BatchPathEngine:
         for lvl in range(budget):
             if int(frontier.count) == 0:
                 break
-            out = expand_level(frontier.verts, frontier.count, ell_idx, ell_mask,
-                               slack, splice_vec, stop,
+            out = expand_level(frontier.verts, frontier.count, ell_idx,
+                               prune_tbl, stop,
                                level=lvl, budget=budget, out_cap=caps[lvl + 1],
                                backend=self._kb)
             if bool(out.frontier.overflow):

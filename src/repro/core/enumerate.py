@@ -21,8 +21,8 @@ import jax.numpy as jnp
 
 from .pathset import PathSet, compact_rows
 
-__all__ = ["ExpandOut", "expand_level", "extract_rows", "select_ending_at",
-           "count_ending_at"]
+__all__ = ["ExpandOut", "expand_level", "prune_table", "extract_rows",
+           "select_ending_at", "count_ending_at"]
 
 
 class ExpandOut(NamedTuple):
@@ -31,33 +31,65 @@ class ExpandOut(NamedTuple):
     splice_hit: jax.Array  # (cap, D) bool -- candidates redirected to splice
 
 
+def prune_table(slack: jax.Array, splice_budget: jax.Array) -> jax.Array:
+    """Stack the two per-vertex int8 prune vectors into the (n+1, 2)
+    table :func:`expand_level` consumes — column 0 = Lemma-3.1 slack,
+    column 1 = splice budget (-1 = no dominating query). Built once per
+    node run (both vectors are fixed for a node), so every level pays a
+    single fused gather instead of one gather per vector."""
+    return jnp.stack([slack, splice_budget], axis=1)
+
+
 @partial(jax.jit, static_argnames=("level", "budget", "out_cap", "backend"))
 def expand_level(verts: jax.Array, count: jax.Array,
-                 ell_idx: jax.Array, ell_mask: jax.Array,
-                 slack: jax.Array, splice_budget: jax.Array,
+                 ell_idx: jax.Array, prune_tbl: jax.Array,
                  stop_vertex: jax.Array,
                  *, level: int, budget: int, out_cap: int,
                  backend: str = "jnp") -> ExpandOut:
     """One superstep: expand all level-`level` paths by one hop.
 
     verts:  (cap, L) int32 frontier paths (cols 0..level used).
-    slack:  (n+1,) int8 -- keep candidate v at depth d iff slack[v] >= d.
-    splice_budget: (n+1,) int8 -- kappa' of a materialized dominating query
-            rooted at v, else -1. Candidates with
-            splice_budget[v] >= budget-(level+1) splice instead of expanding.
+    ell_idx: (n, D) or (n+1, D) int32 padded ELL table; pad entries hold
+            the sentinel value ``n``. The validity mask is derived as
+            ``nbrs != n`` — the EllView/delta-patch invariant
+            ``mask == (idx != n)`` holds by construction, so no separate
+            mask gather is dispatched.
+    prune_tbl: (n+1, 2) int8 from :func:`prune_table` — one gather feeds
+            both the slack prune (col 0: keep candidate v at depth d iff
+            slack[v] >= d) and the splice trigger (col 1: kappa' of a
+            materialized dominating query rooted at v, else -1;
+            candidates with splice >= budget-(level+1) splice instead of
+            expanding).
     stop_vertex: () int32 -- do not expand *from* this vertex (dedicated
             query optimization; pass -2 to disable).
     backend: static resolved kernel backend; ``pallas``/``interpret`` route
             the duplicate-vertex mask through one kernels/path_join
             membership dispatch instead of the broadcast-compare chain.
+
+    Dispatch accounting (audited: see benchmarks/baselines/
+    DISPATCH_BUDGETS.json and ``python -m repro.analysis --audit``):
+    fusing the mask gather into the ``nbrs != n`` compare and the
+    slack + splice gathers into the single prune-table gather cut the
+    traced superstep from 85 to 80 eqns (jnp) / 83 to 78 (interpret) at
+    the audit probe shape. The remainder stays unfused deliberately:
+    the duplicate mask is one broadcast-compare XLA fuses on its own
+    (and is already a single kernel dispatch on the kernel backends),
+    and the cumsum compaction is the shared ``compact_rows`` primitive —
+    fusing it here would fork the compaction path every PathSet consumer
+    relies on for a ~2-eqn saving.
     """
     cap, L = verts.shape
-    n = ell_idx.shape[0] - 1  # ell tables carry a sentinel row n
+    # the prune table always has n+1 rows (slack/splice carry a sentinel
+    # entry), whereas ELL tables come in both (n, D) and (n+1, D) forms —
+    # so the pad-sentinel value is derived from prune_tbl, not ell_idx
+    n = prune_tbl.shape[0] - 1
     D = ell_idx.shape[1]
     row_valid = jnp.arange(cap) < count
-    last = jnp.where(row_valid, verts[:, level], n)
+    # rows past `count` gather row 0 (any in-bounds row works: row_valid
+    # masks every candidate they produce)
+    last = jnp.where(row_valid, verts[:, level], 0)
     nbrs = ell_idx[last]                             # (cap, D)
-    valid = ell_mask[last] & row_valid[:, None]
+    valid = (nbrs != n) & row_valid[:, None]
     valid &= (last != stop_vertex)[:, None]
     # duplicate-vertex mask: candidate already on the path
     if backend != "jnp":
@@ -65,11 +97,12 @@ def expand_level(verts: jax.Array, count: jax.Array,
         dup = path_member(verts[:, :level + 1], nbrs, backend=backend)
     else:
         dup = (nbrs[:, :, None] == verts[:, None, :level + 1]).any(-1)
+    pruned = prune_tbl[nbrs]                         # (cap, D, 2) one gather
     # Lemma 3.1 prune at depth level+1
-    keep = valid & ~dup & (slack[nbrs] >= level + 1)
+    keep = valid & ~dup & (pruned[..., 0] >= level + 1)
     # splice triggers (cached dominating query covers the remaining budget)
     remaining = budget - (level + 1)
-    splice_hit = keep & (splice_budget[nbrs] >= remaining)
+    splice_hit = keep & (pruned[..., 1] >= remaining)
     expand_mask = keep & ~splice_hit
 
     # build candidate rows: prefix + new vertex at column level+1

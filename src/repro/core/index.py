@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .graph import DeviceGraph, Graph
+from .graph import DeviceGraph
 from .msbfs import edge_span, msbfs_dist, msbfs_dist_ell, INF_FOR
 
 __all__ = ["QueryIndex", "build_index", "walk_counts", "walk_counts_ell",

@@ -33,11 +33,35 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["msbfs_dist", "msbfs_set_dist", "msbfs_hop", "msbfs_dist_ell",
-           "msbfs_set_dist_ell", "INF_FOR", "edge_span"]
+           "msbfs_set_dist_ell", "INF_FOR", "edge_span", "K_MAX_INT8"]
+
+# Largest hop budget the int8 distance representation supports. INF_FOR
+# (k_max + 1) must stay representable AND keep headroom below int8 max
+# for downstream +1/-offset hop arithmetic (prune tables, splice
+# budgets); 120 leaves 127 - 121 = 6 values of slack above the sentinel.
+K_MAX_INT8 = 120
+_INT8_MAX = 127
 
 
 def INF_FOR(k_max: int) -> int:
     return k_max + 1
+
+
+def _check_k_max(k_max: int) -> None:
+    """Static int8-range guard for the sweep entry points.
+
+    ``k_max`` is a static jit argument, so this raises at trace time —
+    before any device work — instead of silently clamping (the historical
+    behaviour) and computing wrong-radius distances.
+    """
+    if not 0 <= int(k_max) <= K_MAX_INT8:
+        raise ValueError(
+            f"k_max={k_max} out of range for int8 MS-BFS distances: "
+            f"requires 0 <= k_max <= K_MAX_INT8={K_MAX_INT8} so the "
+            f"sentinel INF_FOR(k_max)={int(k_max) + 1} fits int8 "
+            f"(max {_INT8_MAX}) with {_INT8_MAX - K_MAX_INT8 - 1} values "
+            f"of headroom above INF for downstream hop arithmetic; "
+            f"reduce the hop budget (or bucket it) before the sweep")
 
 
 def edge_span(m_valid: int, edge_chunk: int, m_cap: int) -> int:
@@ -96,6 +120,7 @@ def msbfs_set_dist(esrc: jax.Array, edst: jax.Array, seed_mask: jax.Array,
     seed_mask : (n+1,) int8 in {0,1} (row n must be 0).
     Returns (n+1,) int8 with unreached = INF = k_max + 1, row n = INF.
     """
+    _check_k_max(k_max)
     INF = np.int8(INF_FOR(k_max))
     seed = seed_mask.astype(jnp.int8)[:, None]          # (n+1, 1)
     dist = jnp.where(seed[:, 0].astype(bool), jnp.int8(0), INF)
@@ -120,6 +145,7 @@ def msbfs_dist(esrc: jax.Array, edst: jax.Array, sources: jax.Array,
     Returns dist (n+1, S) int8; dist[v, i] = min(hops(sources[i] -> v), INF),
     row n is INF (sentinel for padded gathers).
     """
+    _check_k_max(k_max)
     S = sources.shape[0]
     INF = np.int8(INF_FOR(k_max))
     dist = jnp.full((n + 1, S), INF, dtype=jnp.int8)
@@ -166,8 +192,8 @@ def msbfs_dist_ell(ell_in_idx: jax.Array, sources: jax.Array,
     graph (distances are set-membership facts; only the dispatch shape of
     a level differs between backends).
     """
-    from ..kernels.msbfs_expand.ops import msbfs_step
-    from ..kernels.msbfs_expand.ref import pack_bits
+    _check_k_max(k_max)
+    from ..kernels.msbfs_expand.ops import msbfs_step, pack_bits
 
     S = sources.shape[0]
     W = -(-S // 32)
@@ -200,8 +226,8 @@ def msbfs_set_dist_ell(ell_in_idx: jax.Array, seed_mask: jax.Array,
     seed_mask : (n+1,) int8 in {0,1} (row n must be 0).
     Returns (n+1,) int8 bit-equal to :func:`msbfs_set_dist`.
     """
-    from ..kernels.msbfs_expand.ops import msbfs_step
-    from ..kernels.msbfs_expand.ref import pack_bits
+    _check_k_max(k_max)
+    from ..kernels.msbfs_expand.ops import msbfs_step, pack_bits
 
     INF = np.int8(INF_FOR(k_max))
     idx = ell_in_idx[:n]

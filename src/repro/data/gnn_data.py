@@ -9,7 +9,6 @@ from __future__ import annotations
 import numpy as np
 
 from ..core.graph import Graph
-from ..core import generators
 from ..config import GNNConfig, ShapeSpec
 
 __all__ = ["flat_batch", "molecule_batch", "sampled_batch", "rbf_expand"]

@@ -19,7 +19,6 @@ from __future__ import annotations
 import dataclasses
 import signal
 import time
-from pathlib import Path
 from typing import Callable, Optional
 
 import jax

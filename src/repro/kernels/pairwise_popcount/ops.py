@@ -4,9 +4,9 @@ from __future__ import annotations
 import jax
 
 from ..registry import BackendLike, dispatch, register_op
-from ..msbfs_expand.ref import pack_bits
+from ..msbfs_expand.ops import pack_bits
 from .kernel import pairwise_popcount_pallas
-from .ref import pairwise_popcount_ref, intersections_bool_ref
+from .ref import intersections_bool_ref
 
 __all__ = ["pairwise_intersections"]
 

@@ -30,10 +30,10 @@ from __future__ import annotations
 import enum
 import importlib
 import os
-from typing import Callable, Optional, Union
+from typing import Callable, Union
 
 __all__ = ["KernelBackend", "BackendLike", "resolve_backend", "register_op",
-           "dispatch", "registered_ops", "ENV_VAR"]
+           "dispatch", "registered_ops", "op_manifest", "ENV_VAR"]
 
 ENV_VAR = "REPRO_KERNEL_BACKEND"
 
@@ -127,3 +127,14 @@ def dispatch(name: str, backend: BackendLike = None) -> Callable:
 def registered_ops() -> list[str]:
     """Every known op name (registered or lazily registrable)."""
     return sorted(set(_TABLE) | set(_OP_MODULES))
+
+
+def op_manifest() -> dict[str, str]:
+    """Op name -> owning ops-module path, for every known op.
+
+    The static analyzer (``repro.analysis.jaxpr_audit``) consumes this to
+    enforce audit coverage: a newly registered op must either appear in
+    the audit manifest or be explicitly listed as exempt — registering
+    kernel math that no static check ever traces is itself a finding.
+    """
+    return dict(sorted(_OP_MODULES.items()))

@@ -12,10 +12,9 @@ Collective traffic per op = max(result bytes, sum of operand bytes)
 """
 from __future__ import annotations
 
-import json
 import re
 
-__all__ = ["analyze_hlo", "count_entry_ops"]
+__all__ = ["analyze_hlo", "count_entry_ops", "count_eqns"]
 
 DT = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
       "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
@@ -75,6 +74,31 @@ def count_entry_ops(hlo: str) -> int:
         if m and m.group(1) not in _NON_WORK_OPS:
             count += 1
     return count
+
+
+def count_eqns(jaxpr) -> int:
+    """Equations in a jaxpr, recursing into sub-jaxprs (pjit/scan/cond)
+    but treating a pallas_call as ONE equation — its body is a single
+    fused device dispatch, which is exactly what we are counting.
+
+    This is the pre-compile twin of :func:`count_entry_ops`: the jaxpr
+    eqn count upper-bounds the dispatch footprint (XLA fusion can only
+    shrink it), is deterministic across XLA versions, and is what the
+    committed ``DISPATCH_BUDGETS.json`` baselines are expressed in.
+    Shared by ``kernels_bench`` and ``repro.analysis.jaxpr_audit``.
+    """
+    total = 0
+    for eqn in jaxpr.eqns:
+        total += 1
+        if eqn.primitive.name == "pallas_call":
+            continue
+        for val in eqn.params.values():
+            for v in (val if isinstance(val, (tuple, list)) else [val]):
+                if hasattr(v, "jaxpr"):          # ClosedJaxpr
+                    total += count_eqns(v.jaxpr)
+                elif hasattr(v, "eqns"):         # raw Jaxpr
+                    total += count_eqns(v)
+    return total
 
 
 def analyze_hlo(hlo: str) -> dict:

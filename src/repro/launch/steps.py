@@ -58,8 +58,9 @@ def _abstract(tree):
 
 
 def build_bundle(arch: str, shape_name: str, rules: Rules,
-                 opts: RunOptions = RunOptions(), reduced: bool = False,
+                 opts: RunOptions | None = None, reduced: bool = False,
                  overrides: dict | None = None) -> StepBundle:
+    opts = RunOptions() if opts is None else opts
     mod = config_registry.get(arch)
     cfg = mod.REDUCED if reduced else mod.CONFIG
     shape = mod.SHAPES[shape_name]
@@ -466,7 +467,7 @@ def _engine_bundle(arch, cfg: PathEngineConfig, shape: ShapeSpec,
     width = (k + 1) // 2 + 1
 
     def engine_superstep(ell_idx, frontier, dist, hop,
-                         pruned_ell, pruned_mask, slack, paths, count):
+                         pruned_ell, prune_tbl, paths, count):
         """One index hop (bit-packed MS-BFS) + one enumeration expand."""
         # --- MS-BFS hop over the vertex-sharded billion-edge graph
         # frontier/dist come in without the sentinel row (shardable V);
@@ -492,8 +493,8 @@ def _engine_bundle(arch, cfg: PathEngineConfig, shape: ShapeSpec,
         frontier = constrain(frontier, ("cells", None))
         # --- enumeration superstep on the index-pruned subgraph
         from ..core.enumerate import expand_level
-        out = expand_level(paths, count, pruned_ell, pruned_mask, slack,
-                           jnp.full((Vp + 1,), -1, jnp.int8), jnp.int32(-2),
+        out = expand_level(paths, count, pruned_ell, prune_tbl,
+                           jnp.int32(-2),
                            level=1, budget=width - 1, out_cap=P_CAP)
         return frontier, dist, out.frontier.verts, out.frontier.count
 
@@ -503,8 +504,7 @@ def _engine_bundle(arch, cfg: PathEngineConfig, shape: ShapeSpec,
         jax.ShapeDtypeStruct((V, Q), jnp.int8),         # dist
         jax.ShapeDtypeStruct((), I32),                  # hop
         jax.ShapeDtypeStruct((Vp + 1, cap), I32),       # pruned ell
-        jax.ShapeDtypeStruct((Vp + 1, cap), jnp.bool_),
-        jax.ShapeDtypeStruct((Vp + 1,), jnp.int8),      # slack
+        jax.ShapeDtypeStruct((Vp + 1, 2), jnp.int8),    # slack+splice table
         jax.ShapeDtypeStruct((P_CAP, width), I32),      # paths
         jax.ShapeDtypeStruct((), I32),                  # count
     )
@@ -519,7 +519,6 @@ def _engine_bundle(arch, cfg: PathEngineConfig, shape: ShapeSpec,
              rules.sharding(),
              rules.sharding(None, None),
              rules.sharding(None, None),
-             rules.sharding(None),
              rules.sharding("cells", None),
              rules.sharding())
     out_sh = (rules.sharding("cells", None), rules.sharding("cells", None),

@@ -19,7 +19,6 @@ Aggregation op per config (sum/mean/max). MLPs follow each paper's shape
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any
 
 import jax

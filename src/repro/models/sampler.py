@@ -11,7 +11,7 @@ import dataclasses
 
 import numpy as np
 
-from ..core.graph import Graph
+from ..core.graph import Graph, pow2_ceil
 
 __all__ = ["SampledBlock", "sample_blocks"]
 
@@ -62,8 +62,8 @@ def sample_blocks(g: Graph, roots: np.ndarray, fanouts: tuple[int, ...],
     src_loc = np.array([remap[int(v)] for v in src], np.int32)
     dst_loc = np.array([remap[int(v)] for v in dst], np.int32)
 
-    n_cap = node_cap or int(2 ** np.ceil(np.log2(max(nodes.size, 2))))
-    e_cap = edge_cap or int(2 ** np.ceil(np.log2(max(src_loc.size, 2))))
+    n_cap = node_cap or pow2_ceil(max(nodes.size, 2))
+    e_cap = edge_cap or pow2_ceil(max(src_loc.size, 2))
     node_ids = np.full(n_cap, -1, np.int64)
     node_ids[:nodes.size] = nodes
     es = np.zeros(e_cap, np.int32)

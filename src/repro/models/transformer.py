@@ -20,9 +20,7 @@ n_kv_heads < tensor size (standard GQA TP practice).
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ test_query_api.py). Property-based invariants live in
 test_engine_properties.py (they need hypothesis, an optional [test]
 dependency, and degrade to skips there).
 """
-import numpy as np
 import pytest
 
 from repro.core import BatchPathEngine, EngineConfig

@@ -1,7 +1,5 @@
 """Fault tolerance: checkpoint atomicity, exact resume, failure injection,
 work-stealing scheduler, gradient compression."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -113,7 +113,7 @@ class TestEllSpmm:
 
     def test_matches_segment_sum(self):
         from repro.kernels.ell_spmm import ops
-        from repro.core.graph import Graph, DeviceGraph
+        from repro.core.graph import DeviceGraph
         from repro.core import generators
         g = generators.erdos(50, 4.0, seed=3)
         dg = DeviceGraph.build(g)

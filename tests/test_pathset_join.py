@@ -111,7 +111,6 @@ class TestWalkCountsUpperBound:
         counts (so planned capacities never overflow)."""
         from repro.core.graph import Graph, DeviceGraph
         from repro.core.index import walk_counts
-        from repro.core.oracle import bfs_dist_from
         r = np.random.default_rng(seed)
         g = Graph.from_edges(n, r.integers(0, n, m), r.integers(0, n, m))
         dg = DeviceGraph.build(g)

@@ -23,8 +23,7 @@ hide behind rematerialization.
 import numpy as np
 import pytest
 
-from repro.core import (BatchPathEngine, EngineConfig, GraphDelta,
-                        generators)
+from repro.core import BatchPathEngine, EngineConfig, GraphDelta
 from repro.core.graph import DeviceGraph, Graph
 from repro.core.oracle import enumerate_paths_bruteforce, path_set
 

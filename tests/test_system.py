@@ -7,8 +7,6 @@ results identical to sequential processing, duplicates-free, oracle-exact.
 Uses the typed run()/BatchReport API throughout (the deprecated process()
 shim is covered by tests/test_engine.py and tests/test_query_api.py).
 """
-import numpy as np
-
 from repro.core import BatchPathEngine, EngineConfig
 from repro.core import generators
 from repro.core.oracle import enumerate_paths_bruteforce, path_set
