@@ -120,6 +120,53 @@ def check_kernels(current: dict, baseline: dict | None) -> None:
                 f"{base_ref}")
 
 
+def check_obs(current: dict, max_overhead: float) -> None:
+    """Gate the observability contract (results/BENCH_obs.json):
+    traced == untraced results, zero warm retraces with tracing on, the
+    exported trace names every pipeline stage and explains >= 90% of the
+    batch wall, and the traced warm arm costs <= ``max_overhead`` (with a
+    10ms absolute floor — sub-millisecond walls make a relative gate
+    pure noise)."""
+    if not current.get("parity_ok", False):
+        _fail("traced results differ from untraced (parity broken)")
+    else:
+        _ok("traced == untraced results")
+    if current.get("warm_retraces", -1) != 0:
+        _fail(f"tracing retraced the warm loop: "
+              f"{current.get('warm_retraces')}")
+    else:
+        _ok("traced warm loop retraces: 0")
+    missing = current.get("missing_stages", ["<field missing>"])
+    if missing:
+        _fail(f"trace is missing pipeline stages: {missing}")
+    else:
+        _ok(f"trace names all required stages "
+            f"({len(current.get('stages', []))} span names)")
+    cov = current.get("coverage_cold", 0.0)
+    if cov < 0.90:
+        _fail(f"stage spans explain only {cov:.0%} of the enumeration "
+              f"batch wall (need >= 90%)")
+    else:
+        _ok(f"stage coverage {cov:.0%} of batch wall "
+            f"(warm batch: {current.get('coverage_warm', 0.0):.0%})")
+    if max_overhead <= 0:
+        print("  (overhead gate skipped)")
+        return
+    t_off = current.get("t_untraced_s")
+    t_on = current.get("t_traced_s")
+    if t_off is None or t_on is None:
+        _fail("t_untraced_s / t_traced_s missing from obs json")
+        return
+    limit = max(max_overhead * t_off, 0.010)
+    if t_on - t_off > limit:
+        _fail(f"tracing overhead {(t_on - t_off) * 1e3:.1f}ms on a "
+              f"{t_off * 1e3:.1f}ms warm batch exceeds "
+              f"{limit * 1e3:.1f}ms")
+    else:
+        _ok(f"tracing overhead {(t_on - t_off) * 1e3:+.1f}ms on "
+            f"{t_off * 1e3:.1f}ms warm batch (limit {limit * 1e3:.1f}ms)")
+
+
 def check_static(budgets: Path | None) -> None:
     """Structural gate over the committed dispatch budgets: run the layer-2
     jaxpr audit (repro.analysis) — every hot function must trace without
@@ -177,6 +224,13 @@ def main() -> None:
     ap.add_argument("--kernels-baseline", type=Path, default=None,
                     help="committed BENCH_kernels baseline json (optional; "
                          "adds the fused-vs-committed-jnp dispatch gate)")
+    ap.add_argument("--obs", type=Path, default=None,
+                    help="this run's results/BENCH_obs.json (observability "
+                         "overhead/coverage gate)")
+    ap.add_argument("--max-obs-overhead", type=float, default=0.05,
+                    help="allowed traced-vs-untraced warm-batch overhead "
+                         "(0.05 = 5%%, with a 10ms absolute floor; 0 skips "
+                         "the overhead gate)")
     ap.add_argument("--static", action="store_true",
                     help="run the repro.analysis jaxpr audit against the "
                          "committed dispatch budgets")
@@ -185,9 +239,10 @@ def main() -> None:
                          "benchmarks/baselines/DISPATCH_BUDGETS.json)")
     args = ap.parse_args()
     if (args.current is None and args.sharded is None
-            and args.kernels is None and not args.static):
-        ap.error("nothing to check: pass --current, --sharded, --kernels "
-                 "and/or --static")
+            and args.kernels is None and args.obs is None
+            and not args.static):
+        ap.error("nothing to check: pass --current, --sharded, --kernels, "
+                 "--obs and/or --static")
 
     if args.current is not None:
         if args.baseline is None:
@@ -207,6 +262,9 @@ def main() -> None:
         base = (json.loads(args.kernels_baseline.read_text())
                 if args.kernels_baseline else None)
         check_kernels(json.loads(args.kernels.read_text()), base)
+    if args.obs is not None:
+        print(f"obs: {args.obs}")
+        check_obs(json.loads(args.obs.read_text()), args.max_obs_overhead)
     if args.static:
         print("static: jaxpr audit vs committed dispatch budgets")
         check_static(args.static_budgets)

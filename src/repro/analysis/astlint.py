@@ -17,6 +17,10 @@ Implements the RPL rules from :mod:`repro.analysis.rules`. Scope:
   ``rules.STATIC_SHAPE_PARAMS`` must be listed in ``static_argnames``.
 * RPL005 applies everywhere except ``core/graph.py`` (the blessed
   definition site of ``pow2_ceil``/``pad_edge_list``).
+* RPL006 applies in the timed modules (``rules.TIMED_MODULE_PATTERNS``,
+  i.e. the hot modules plus the host-side engine/serving layer):
+  calling ``time.perf_counter()`` directly instead of taking stage
+  walls from ``repro.obs.trace`` spans. ``obs/`` itself is exempt.
 
 Waivers (``# repro-lint: waive[RULE] reason``) are honoured on the
 finding's line or the line directly above.
@@ -29,7 +33,8 @@ from pathlib import Path
 from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from .report import AnalysisReport, Finding
-from .rules import STATIC_SHAPE_PARAMS, is_hot_module, parse_waivers
+from .rules import (STATIC_SHAPE_PARAMS, is_hot_module, is_timed_module,
+                    parse_waivers)
 
 __all__ = ["lint_source", "lint_tree"]
 
@@ -41,6 +46,10 @@ _HOST_SYNC_CALLS = {
     "onp.asarray", "onp.array",
 }
 _CAST_NAMES = {"int", "float", "bool"}
+_PERF_COUNTER_CALLS = {
+    "time.perf_counter", "perf_counter",
+    "time.perf_counter_ns", "perf_counter_ns",
+}
 _DEVICE_PRODUCERS = ("jnp.", "jax.numpy.", "lax.", "jax.lax.", "dispatch")
 
 
@@ -176,7 +185,7 @@ class _RuleVisitor(ast.NodeVisitor):
 
     def __init__(self, relpath: str, index: _ModuleIndex, *,
                  hot: bool, in_kernels: bool, is_ops: bool,
-                 is_arm: bool, is_graph: bool):
+                 is_arm: bool, is_graph: bool, timed: bool = False):
         self.relpath = relpath
         self.index = index
         self.hot = hot                  # RPL001/004 scope
@@ -184,6 +193,7 @@ class _RuleVisitor(ast.NodeVisitor):
         self.is_ops = is_ops            # kernels/*/ops.py
         self.is_arm = is_arm            # ref.py / kernel.py (RPL002 exempt)
         self.is_graph = is_graph        # core/graph.py (RPL005 exempt)
+        self.timed = timed              # RPL006 scope (obs/ exempt)
         self.hits: List[Tuple[str, int, str]] = []
         self._fn_stack: List[str] = []
         self._register_depth = 0
@@ -227,10 +237,17 @@ class _RuleVisitor(ast.NodeVisitor):
                         f"from the op's ops.py instead")
         self.generic_visit(node)
 
-    # -- calls: RPL001 + RPL002 ----------------------------------------
+    # -- calls: RPL001 + RPL002 + RPL006 -------------------------------
     def visit_Call(self, node: ast.Call) -> None:
         dotted = _dotted(node.func) or ""
         name = dotted.rsplit(".", 1)[-1]
+
+        if self.timed and dotted in _PERF_COUNTER_CALLS:
+            self._flag(
+                "RPL006", node,
+                f"direct {dotted}() timing in a timed module — wrap the "
+                f"stage in a repro.obs.trace span and read span.duration "
+                f"so the wall lands in the trace/metrics pipeline")
 
         if not self.is_arm and self._register_depth == 0 and \
                 (name.endswith("_ref") or name.endswith("_pallas")):
@@ -344,6 +361,7 @@ def lint_source(source: str, relpath: str) -> List[Finding]:
         is_ops=in_kernels and parts[-1] == "ops.py",
         is_arm=in_kernels and parts[-1] in ("ref.py", "kernel.py"),
         is_graph=rel == "core/graph.py",
+        timed=is_timed_module(rel),
     )
     visitor.visit(tree)
 

@@ -8,6 +8,8 @@ docs/analysis.md for the full catalog with examples):
   RPL003  shape-bearing jit arguments not declared static
   RPL004  Python-level loops over device arrays in jit-reachable code
   RPL005  raw pow2 shape math not going through ``graph.pow2_ceil``
+  RPL006  hand-rolled ``time.perf_counter()`` timing in the engine /
+          serving modules instead of ``repro.obs.trace`` spans
 
 Waiver syntax (same line, or the line directly above the finding)::
 
@@ -24,8 +26,9 @@ import tokenize
 from typing import Dict, List, Tuple
 
 __all__ = [
-    "RULES", "HOT_MODULE_PATTERNS", "STATIC_SHAPE_PARAMS",
-    "WAIVER_RE", "parse_waivers", "is_hot_module",
+    "RULES", "HOT_MODULE_PATTERNS", "TIMED_MODULE_PATTERNS",
+    "STATIC_SHAPE_PARAMS",
+    "WAIVER_RE", "parse_waivers", "is_hot_module", "is_timed_module",
 ]
 
 RULES: Dict[str, str] = {
@@ -42,6 +45,9 @@ RULES: Dict[str, str] = {
     "RPL005": "raw pow2/parity shape math (2**x, 1<<x, x%2) outside "
               "graph.pow2_ceil/pad_edge_list (breaks the stable-shape "
               "bucket contract)",
+    "RPL006": "hand-rolled time.perf_counter() timing in an engine/serving "
+              "module — stage timing must go through repro.obs.trace spans "
+              "so every wall lands in one trace/metrics pipeline",
 }
 
 # Modules where jit-reachability matters for RPL001/RPL004 (relative to
@@ -54,6 +60,21 @@ HOT_MODULE_PATTERNS: Tuple[str, ...] = (
     "core/index.py",
     "kernels/*.py",
     "kernels/*/*.py",
+)
+
+# Modules whose stage timing must go through repro.obs.trace spans
+# (RPL006): the hot modules above plus the host-side engine / serving
+# layer that owns the per-stage walls. obs/ itself is exempt (it is the
+# blessed definition site); ft/driver.py and launch/dryrun.py stay off
+# the list on purpose — their walls time external processes, not
+# pipeline stages.
+TIMED_MODULE_PATTERNS: Tuple[str, ...] = HOT_MODULE_PATTERNS + (
+    "core/engine.py",
+    "core/distributed.py",
+    "core/delta.py",
+    "core/cache.py",
+    "core/session.py",
+    "launch/serve.py",
 )
 
 # Parameter names that carry shapes (or select compiled variants) in this
@@ -75,6 +96,17 @@ def is_hot_module(relpath: str) -> bool:
     from fnmatch import fnmatch
     rel = relpath.replace("\\", "/")
     return any(fnmatch(rel, pat) for pat in HOT_MODULE_PATTERNS)
+
+
+def is_timed_module(relpath: str) -> bool:
+    """True if ``relpath`` must route stage timing through obs spans
+    (RPL006). Anything under ``obs/`` is exempt — the span/metrics
+    implementation necessarily reads the clock."""
+    from fnmatch import fnmatch
+    rel = relpath.replace("\\", "/")
+    if rel.split("/")[0] == "obs":
+        return False
+    return any(fnmatch(rel, pat) for pat in TIMED_MODULE_PATTERNS)
 
 
 def parse_waivers(source: str) -> Tuple[Dict[int, Tuple[frozenset, str]],

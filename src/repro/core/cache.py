@@ -55,6 +55,7 @@ import numpy as np
 
 from .pathset import HostPathSet, PathSet, offload, pathset_nbytes, upload
 from .query import midpoint_split
+from ..obs import metrics as obsmetrics
 
 __all__ = ["SharedPathCache", "CacheStats", "node_signature",
            "dedicated_keys", "DEFAULT_CACHE_BYTES"]
@@ -119,6 +120,8 @@ class _Entry:
 class SharedPathCache:
     """Bytes-budgeted LRU over host-pinned Ψ-node results."""
 
+    _n_instances = 0   # process-wide ordinal for metric labels
+
     def __init__(self, budget_bytes: int = DEFAULT_CACHE_BYTES):
         if budget_bytes <= 0:
             raise ValueError("budget_bytes must be positive")
@@ -128,6 +131,17 @@ class SharedPathCache:
         self._nbytes = 0
         self.epoch = 0
         self.stats = CacheStats()
+        # CacheStats mirrors into the process metrics registry, labeled
+        # per cache instance (replica caches are distinct instances):
+        # the scrape view of hit ratio / eviction pressure / residency
+        idx = str(SharedPathCache._n_instances)
+        SharedPathCache._n_instances += 1
+        reg = obsmetrics.registry()
+        self._m_hits = reg.counter("cache_hits_total", cache=idx)
+        self._m_misses = reg.counter("cache_misses_total", cache=idx)
+        self._m_inserts = reg.counter("cache_inserts_total", cache=idx)
+        self._m_evictions = reg.counter("cache_evictions_total", cache=idx)
+        self._m_bytes = reg.gauge("cache_bytes", cache=idx)
 
     # -- queries -------------------------------------------------------
     def __len__(self) -> int:
@@ -160,6 +174,7 @@ class SharedPathCache:
         entry = self._entries.get(key)
         if entry is None:
             self.stats.misses += 1
+            self._m_misses.inc()
             return None
         if entry.epoch != self.epoch:
             self._entries.pop(key)
@@ -167,9 +182,13 @@ class SharedPathCache:
             self._drop_root(key)
             self.stats.misses += 1
             self.stats.evictions += 1   # anomaly must show up in telemetry
+            self._m_misses.inc()
+            self._m_evictions.inc()
+            self._m_bytes.set(self._nbytes)
             return None
         self._entries.move_to_end(key)
         self.stats.hits += 1
+        self._m_hits.inc()
         return [upload(h) for h in entry.levels]
 
     # -- updates -------------------------------------------------------
@@ -195,11 +214,14 @@ class SharedPathCache:
             self._nbytes -= evicted.nbytes
             self._drop_root(ekey)
             self.stats.evictions += 1
+            self._m_evictions.inc()
         self._entries[key] = _Entry(levels=host, nbytes=nbytes,
                                     epoch=self.epoch)
         self._roots[key[:2]] += 1
         self._nbytes += nbytes
         self.stats.inserts += 1
+        self._m_inserts.inc()
+        self._m_bytes.set(self._nbytes)
 
     def _drop_root(self, key: CacheKey) -> None:
         # delete zero counts: root churn must not grow the Counter forever
@@ -210,11 +232,13 @@ class SharedPathCache:
 
     def invalidate(self) -> None:
         """Graph mutation hook: drop every entry and start a new epoch."""
+        self._m_evictions.inc(len(self._entries))
         self._entries.clear()
         self._roots.clear()
         self._nbytes = 0
         self.epoch += 1
         self.stats.invalidations += 1
+        self._m_bytes.set(0)
 
     def max_radius(self) -> int:
         """Largest hop radius any live entry's validity depends on: its
@@ -288,6 +312,8 @@ class SharedPathCache:
             entry.epoch = self.epoch
         self.stats.delta_evictions += len(stale)
         self.stats.delta_kept += len(self._entries)
+        self._m_evictions.inc(len(stale))
+        self._m_bytes.set(self._nbytes)
         return {"evicted": len(stale), "kept": len(self._entries),
                 "epoch": self.epoch}
 

@@ -37,7 +37,6 @@ from __future__ import annotations
 
 import dataclasses
 import os
-import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Optional, Sequence
 
@@ -359,16 +358,22 @@ class ShardedExecutor:
 
             rep, dev = reps[ri], self.devices[ri]
             try:
-                t0 = time.perf_counter()
-                # the fan-out path implies a real mesh, so dev is always
-                # a concrete device (the no-mesh executor never fans out)
-                with jax.default_device(dev):
-                    for ci in assign[ri]:
-                        out, cst = rep._cluster_work(queries, index, plus,
-                                                     min_sb, clusters[ci])
-                        outs[ri].update(out)
-                        cstats_all[ri].append(cst)
-                walls[ri] = time.perf_counter() - t0
+                # replica spans are roots of their worker thread's stack
+                # (thread-local nesting); the recorded trace shows each
+                # replica's clusters on its own timeline row
+                with eng.obs.span("replica.run", replica=ri,
+                                  device=str(dev),
+                                  n_clusters=len(assign[ri])) as sr:
+                    # the fan-out path implies a real mesh, so dev is
+                    # always a concrete device (the no-mesh executor
+                    # never fans out)
+                    with jax.default_device(dev):
+                        for ci in assign[ri]:
+                            out, cst = rep._cluster_work(
+                                queries, index, plus, min_sb, clusters[ci])
+                            outs[ri].update(out)
+                            cstats_all[ri].append(cst)
+                walls[ri] = sr.duration
             except BaseException as e:  # noqa: BLE001 — re-raised below
                 errs[ri] = e
 

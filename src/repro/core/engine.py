@@ -18,7 +18,6 @@ API survives as a thin deprecation shim.
 from __future__ import annotations
 
 import dataclasses
-import time
 import warnings
 from typing import Callable, Optional, Sequence
 
@@ -26,6 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import compilelog, distributed
+from ..obs import metrics as obsmetrics
+from ..obs import trace as obstrace
 from .cache import SharedPathCache
 from .delta import (AppliedDelta, GraphDelta, apply_delta as _merge_delta,
                     host_set_dist, pow2_ceil as _pow2, update_device_graph)
@@ -91,6 +92,14 @@ class EngineConfig:
     # n_replicas clusters so the mesh never idles on an over-merged batch
     # (changes the clustering, hence result row order — off by default so
     # sharded == single-device stays bit-identical)
+    trace: bool = False             # record hierarchical stage spans into
+    # the process-wide repro.obs tracer (Chrome-trace exportable); off =
+    # spans still time the t_* stats but nothing is recorded
+    trace_fence: bool = False       # block_until_ready fenced device values
+    # at span exit so async device work is attributed to the launching
+    # span (costs dispatch overlap; measurement mode only)
+    trace_annotations: bool = False  # wrap spans in jax.profiler
+    # TraceAnnotation so they appear on profiler device timelines
 
 
 @dataclasses.dataclass
@@ -165,6 +174,14 @@ class BatchPathEngine:
         # n_compiles / n_retraces / compiled_kernels for its window
         self.compile_log = compilelog.enable() if self.cfg.log_compiles \
             else None
+        # stage spans: like the jit cache and compile log, the recorder is
+        # process-wide — any engine with cfg.trace turns recording on; the
+        # handle itself is always present because every t_* stat below is
+        # a derived view over a span's duration (recorded or not)
+        self.obs = obstrace.enable(
+            fence=self.cfg.trace_fence,
+            annotate=self.cfg.trace_annotations) if self.cfg.trace \
+            else obstrace.tracer()
 
     def set_graph(self, graph: Graph) -> None:
         """Swap the graph wholesale: rebuild device views and drop every
@@ -214,29 +231,33 @@ class BatchPathEngine:
         return report
 
     def _apply_delta_impl(self, delta: GraphDelta) -> dict:
-        t0 = time.perf_counter()
-        applied = _merge_delta(self.g, delta)
-        report = {
-            "n_added": int(applied.added_src.size),
-            "n_removed": int(applied.removed_src.size),
-            "n_touched": int(applied.touched.size),
-            "cache_mode": "none", "device_update": "none",
-        }
-        if applied.n_changed == 0:
-            report["t_apply_s"] = time.perf_counter() - t0
-            return report
-        if self.cache is not None:
-            report.update(self._invalidate_for(applied))
-        self.dg, incremental = update_device_graph(self.dg, applied)
-        report["device_update"] = "incremental" if incremental else "rebuild"
-        self.g = applied.graph
-        self._host_dists = None
-        if self.executor is not None:
-            # replica device views patch in lockstep; their caches were
-            # already invalidated above with the same distance sweep
-            self.executor.propagate_delta(applied)
-        _sync_device_graph(self.dg)   # timer measures completed work
-        report["t_apply_s"] = time.perf_counter() - t0
+        with self.obs.span("engine.apply_delta") as sp:
+            applied = _merge_delta(self.g, delta)
+            sp.set(n_added=int(applied.added_src.size),
+                   n_removed=int(applied.removed_src.size))
+            report = {
+                "n_added": int(applied.added_src.size),
+                "n_removed": int(applied.removed_src.size),
+                "n_touched": int(applied.touched.size),
+                "cache_mode": "none", "device_update": "none",
+            }
+            if applied.n_changed == 0:
+                report["t_apply_s"] = sp.elapsed
+                return report
+            if self.cache is not None:
+                with self.obs.span("cache.invalidate"):
+                    report.update(self._invalidate_for(applied))
+            self.dg, incremental = update_device_graph(self.dg, applied)
+            report["device_update"] = ("incremental" if incremental
+                                       else "rebuild")
+            self.g = applied.graph
+            self._host_dists = None
+            if self.executor is not None:
+                # replica device views patch in lockstep; their caches were
+                # already invalidated above with the same distance sweep
+                self.executor.propagate_delta(applied)
+            _sync_device_graph(self.dg)   # timer measures completed work
+            report["t_apply_s"] = sp.elapsed
         return report
 
     def _all_caches(self) -> list[SharedPathCache]:
@@ -398,16 +419,34 @@ class BatchPathEngine:
         if not qs:   # degenerate but legal (e.g. a filter left nothing)
             stats["t_build_index"] = stats["t_enumerate"] = 0.0
             return BatchReport(queries=qs, results=(), stats=stats)
-        t0 = time.perf_counter()
-        if planner is Planner.PATHENUM:
-            return self._run_pathenum(qs, stats)
-        index = build_index(self._kernel_dg(), [q.key for q in qs],
-                            self.cfg.edge_chunk, backend=self._kb)
-        index.dist_s.block_until_ready()
-        stats["t_build_index"] = time.perf_counter() - t0
-        if planner.batched:
-            return self._run_batch(qs, index, plus, stats, clusters)
-        return self._run_basic(qs, index, plus, stats)
+        with self.obs.span("engine.run", planner=planner.value,
+                           n_queries=len(qs)) as root:
+            if planner is Planner.PATHENUM:
+                report = self._run_pathenum(qs, stats)
+            else:
+                with self.obs.span("index.build",
+                                   n_queries=len(qs)) as sidx:
+                    index = build_index(self._kernel_dg(),
+                                        [q.key for q in qs],
+                                        self.cfg.edge_chunk,
+                                        backend=self._kb)
+                    index.dist_s.block_until_ready()
+                stats["t_build_index"] = sidx.duration
+                if planner.batched:
+                    report = self._run_batch(qs, index, plus, stats,
+                                             clusters)
+                else:
+                    report = self._run_basic(qs, index, plus, stats)
+        stats["t_wall_s"] = root.duration
+        reg = obsmetrics.registry()
+        reg.histogram("engine_batch_wall_s", planner=planner.value,
+                      backend=self._kb).record(root.duration)
+        lat = reg.histogram("query_latency_s", planner=planner.value,
+                            backend=self._kb)
+        for r in report.results:
+            if r.time_s is not None:
+                lat.record(r.time_s)
+        return report
 
     def process(self, queries: Sequence[Query], mode: str = "batch",
                 clusters: Optional[list[list[int]]] = None) -> BatchResult:
@@ -424,22 +463,25 @@ class BatchPathEngine:
     # ------------------------------------------------------------------
     def _run_basic(self, queries, index: QueryIndex, plus: bool,
                    stats) -> BatchReport:
-        t0 = time.perf_counter()
-        results = []
-        for qi, q in enumerate(queries):
-            tq = time.perf_counter()
-            a, b = self._split(qi, index, plus)
-            fs = self._dedicated_slack(index, qi, forward=True)
-            fl = self._run_node(False, q.s, a, fs, [], stop_vertex=q.t)
+        with self.obs.span("enumerate.batch",
+                           n_queries=len(queries)) as senum:
+            results = []
+            for qi, q in enumerate(queries):
+                with self.obs.span("assemble.query", qi=qi) as sq:
+                    a, b = self._split(qi, index, plus)
+                    fs = self._dedicated_slack(index, qi, forward=True)
+                    fl = self._run_node(False, q.s, a, fs, [],
+                                        stop_vertex=q.t)
 
-            def bwd(qi=qi, q=q, b=b):
-                bs = self._dedicated_slack(index, qi, forward=False)
-                return self._run_node(True, q.t, b, bs, [], stop_vertex=q.s)
+                    def bwd(qi=qi, q=q, b=b):
+                        bs = self._dedicated_slack(index, qi, forward=False)
+                        return self._run_node(True, q.t, b, bs, [],
+                                              stop_vertex=q.s)
 
-            r = self._wrap(q, self._payload(q, fl, a, bwd, b, stats))
-            r.time_s = time.perf_counter() - tq
-            results.append(r)
-        stats["t_enumerate"] = time.perf_counter() - t0
+                    r = self._wrap(q, self._payload(q, fl, a, bwd, b, stats))
+                r.time_s = sq.duration
+                results.append(r)
+        stats["t_enumerate"] = senum.duration
         return BatchReport(queries=tuple(queries), results=tuple(results),
                            stats=stats)
 
@@ -448,25 +490,24 @@ class BatchPathEngine:
         results = []
         t_idx = t_enum = 0.0
         for q in queries:
-            t0 = time.perf_counter()
-            index = build_index(self._kernel_dg(), [q.key],
-                                self.cfg.edge_chunk, backend=self._kb)
-            index.dist_s.block_until_ready()
-            dt_idx = time.perf_counter() - t0
-            t_idx += dt_idx
-            t0 = time.perf_counter()
-            a, b = self._split(0, index, False)
-            fs = self._dedicated_slack(index, 0, forward=True)
-            fl = self._run_node(False, q.s, a, fs, [], stop_vertex=q.t)
+            with self.obs.span("index.build", pathenum=True) as sidx:
+                index = build_index(self._kernel_dg(), [q.key],
+                                    self.cfg.edge_chunk, backend=self._kb)
+                index.dist_s.block_until_ready()
+            t_idx += sidx.duration
+            with self.obs.span("assemble.query") as sq:
+                a, b = self._split(0, index, False)
+                fs = self._dedicated_slack(index, 0, forward=True)
+                fl = self._run_node(False, q.s, a, fs, [], stop_vertex=q.t)
 
-            def bwd(q=q, b=b, index=index):
-                bs = self._dedicated_slack(index, 0, forward=False)
-                return self._run_node(True, q.t, b, bs, [], stop_vertex=q.s)
+                def bwd(q=q, b=b, index=index):
+                    bs = self._dedicated_slack(index, 0, forward=False)
+                    return self._run_node(True, q.t, b, bs, [],
+                                          stop_vertex=q.s)
 
-            r = self._wrap(q, self._payload(q, fl, a, bwd, b, stats))
-            dt_enum = time.perf_counter() - t0
-            t_enum += dt_enum
-            r.time_s = dt_idx + dt_enum
+                r = self._wrap(q, self._payload(q, fl, a, bwd, b, stats))
+            t_enum += sq.duration
+            r.time_s = sidx.duration + sq.duration
             results.append(r)
         stats["t_build_index"] = t_idx
         stats["t_enumerate"] = t_enum
@@ -478,21 +519,25 @@ class BatchPathEngine:
     # ------------------------------------------------------------------
     def _run_batch(self, queries, index: QueryIndex, plus: bool, stats,
                    clusters: Optional[list[list[int]]] = None) -> BatchReport:
-        t0 = time.perf_counter()
-        if clusters is None:
-            mu = similarity_matrix(index, backend=self._kb)
-            min_clusters = 1
-            if self.cfg.balance_clusters and self.executor is not None:
-                min_clusters = self.executor.n_replicas
-            clusters = cluster_queries(mu, self.cfg.gamma,
-                                       min_clusters=min_clusters)
-            stats["mu_mean"] = float((mu.sum() - len(queries)) /
-                                     max(len(queries) * (len(queries) - 1), 1))
-        else:
-            seen = [qi for cl in clusters for qi in cl]
-            if sorted(seen) != list(range(len(queries))):
-                raise ValueError("clusters must partition the query indices")
-        stats["t_cluster"] = time.perf_counter() - t0
+        with self.obs.span("cluster.queries",
+                           precomputed=clusters is not None) as sc:
+            if clusters is None:
+                mu = similarity_matrix(index, backend=self._kb)
+                min_clusters = 1
+                if self.cfg.balance_clusters and self.executor is not None:
+                    min_clusters = self.executor.n_replicas
+                clusters = cluster_queries(mu, self.cfg.gamma,
+                                           min_clusters=min_clusters)
+                stats["mu_mean"] = float(
+                    (mu.sum() - len(queries)) /
+                    max(len(queries) * (len(queries) - 1), 1))
+            else:
+                seen = [qi for cl in clusters for qi in cl]
+                if sorted(seen) != list(range(len(queries))):
+                    raise ValueError(
+                        "clusters must partition the query indices")
+            sc.set(n_clusters=len(clusters))
+        stats["t_cluster"] = sc.duration
         stats["n_clusters"] = len(clusters)
 
         min_sb = 0 if self.cfg.paper_faithful_shares else self.cfg.min_shared_budget
@@ -524,58 +569,63 @@ class BatchPathEngine:
         cstats = {"n_psi_nodes": 0, "n_materialized": 0,
                   "n_cache_hits": 0, "n_cache_misses": 0,
                   "n_rows_assembled": 0}
-        t0 = time.perf_counter()
-        halves_f = {}
-        halves_b = {}
-        ends_f = {}
-        ends_b = {}
-        for qi in cluster:
-            s, t, k = queries[qi]
-            a, b = self._split(qi, index, plus)
-            halves_f[qi] = (s, a)
-            halves_b[qi] = (t, b)
-            ends_f[qi] = (t, k)
-            ends_b[qi] = (s, k)
-        hop_f = self._hop_ok(index, cluster, forward=True)
-        hop_b = self._hop_ok(index, cluster, forward=False)
-        plan_f = detect_common_queries(self.g, cluster, halves_f, hop_f,
-                                       reverse=False, min_shared_budget=min_sb,
-                                       endpoints=ends_f)
-        plan_b = detect_common_queries(self.g, cluster, halves_b, hop_b,
-                                       reverse=True, min_shared_budget=min_sb,
-                                       endpoints=ends_b)
-        cstats["n_shared"] = plan_f.n_shared + plan_b.n_shared
-        # deduped half-queries: halves mapped onto an existing node,
-        # counted per direction (identical queries collapse entirely)
-        cstats["n_dedup"] = (
-            len(cluster) - len(set(plan_f.half_of_query.values()))
-            + len(cluster) - len(set(plan_b.half_of_query.values())))
-        cstats["n_share_edges"] = (
-            sum(len(n.in_edges) for n in plan_f.nodes)
-            + sum(len(n.in_edges) for n in plan_b.nodes))
-        cstats["t_detect"] = time.perf_counter() - t0
+        with self.obs.span("detect.cluster", size=len(cluster)) as sd:
+            halves_f = {}
+            halves_b = {}
+            ends_f = {}
+            ends_b = {}
+            for qi in cluster:
+                s, t, k = queries[qi]
+                a, b = self._split(qi, index, plus)
+                halves_f[qi] = (s, a)
+                halves_b[qi] = (t, b)
+                ends_f[qi] = (t, k)
+                ends_b[qi] = (s, k)
+            hop_f = self._hop_ok(index, cluster, forward=True)
+            hop_b = self._hop_ok(index, cluster, forward=False)
+            plan_f = detect_common_queries(self.g, cluster, halves_f, hop_f,
+                                           reverse=False,
+                                           min_shared_budget=min_sb,
+                                           endpoints=ends_f)
+            plan_b = detect_common_queries(self.g, cluster, halves_b, hop_b,
+                                           reverse=True,
+                                           min_shared_budget=min_sb,
+                                           endpoints=ends_b)
+            cstats["n_shared"] = plan_f.n_shared + plan_b.n_shared
+            # deduped half-queries: halves mapped onto an existing node,
+            # counted per direction (identical queries collapse entirely)
+            cstats["n_dedup"] = (
+                len(cluster) - len(set(plan_f.half_of_query.values()))
+                + len(cluster) - len(set(plan_b.half_of_query.values())))
+            cstats["n_share_edges"] = (
+                sum(len(n.in_edges) for n in plan_f.nodes)
+                + sum(len(n.in_edges) for n in plan_b.nodes))
+        cstats["t_detect"] = sd.duration
 
-        t0 = time.perf_counter()
-        cache_f = self._run_plan(plan_f, index, forward=True, stats=cstats)
-        cache_b = self._run_plan(plan_b, index, forward=False, stats=cstats)
-        # identical (halves, k, output, limit) -> identical payloads
-        assembled: dict = {}
-        results: dict[int, QueryResult] = {}
-        for qi in cluster:
-            q = queries[qi]
-            tq = time.perf_counter()
-            a = halves_f[qi][1]
-            b = halves_b[qi][1]
-            fid = plan_f.half_of_query[qi]
-            bid = plan_b.half_of_query[qi]
-            key = (fid, bid, a, b, q.k, q.t, q.output, q.limit)
-            if key not in assembled:
-                fl = cache_f[fid]
-                assembled[key] = self._payload(
-                    q, fl, a, lambda bid=bid: cache_b[bid], b, cstats)
-            results[qi] = self._wrap(q, assembled[key])
-            results[qi].time_s = time.perf_counter() - tq
-        cstats["t_enumerate"] = time.perf_counter() - t0
+        with self.obs.span("enumerate.cluster", size=len(cluster)) as se:
+            cache_f = self._run_plan(plan_f, index, forward=True,
+                                     stats=cstats)
+            cache_b = self._run_plan(plan_b, index, forward=False,
+                                     stats=cstats)
+            # identical (halves, k, output, limit) -> identical payloads
+            assembled: dict = {}
+            results: dict[int, QueryResult] = {}
+            for qi in cluster:
+                q = queries[qi]
+                with self.obs.span("assemble.query", qi=qi) as sq:
+                    a = halves_f[qi][1]
+                    b = halves_b[qi][1]
+                    fid = plan_f.half_of_query[qi]
+                    bid = plan_b.half_of_query[qi]
+                    key = (fid, bid, a, b, q.k, q.t, q.output, q.limit)
+                    if key not in assembled:
+                        fl = cache_f[fid]
+                        assembled[key] = self._payload(
+                            q, fl, a, lambda bid=bid: cache_b[bid], b,
+                            cstats)
+                    results[qi] = self._wrap(q, assembled[key])
+                results[qi].time_s = sq.duration
+        cstats["t_enumerate"] = se.duration
         return results, cstats
 
     # ------------------------------------------------------------------
@@ -626,7 +676,12 @@ class BatchPathEngine:
             if nid in need:
                 continue
             need.add(nid)
-            got = self.cache.get(keys[nid]) if nid in keys else None
+            if nid in keys:
+                with self.obs.span("cache.get") as sg:
+                    got = self.cache.get(keys[nid])
+                    sg.set(hit=got is not None)
+            else:
+                got = None
             if got is not None:
                 cache[nid] = got
             else:
@@ -642,7 +697,8 @@ class BatchPathEngine:
             cache[nid] = self._run_node(not forward, node.src, node.budget,
                                         slack, children, stop_vertex=stops[nid])
             if self.cache is not None and nid in keys:
-                self.cache.put(keys[nid], cache[nid])
+                with self.obs.span("cache.put"):
+                    self.cache.put(keys[nid], cache[nid])
         if stats is not None:
             stats["n_psi_nodes"] += len(plan.nodes)
             stats["n_materialized"] += len(mat)
@@ -656,17 +712,20 @@ class BatchPathEngine:
     # ------------------------------------------------------------------
     def _run_node(self, reverse: bool, source: int, budget: int, slack,
                   children, stop_vertex: int = -2):
-        caps = self._plan_caps(reverse, source, budget, slack)
-        for _ in range(8):
-            out = self._run_node_once(reverse, source, budget, slack, children,
-                                      stop_vertex, caps)
-            if out is not None:
-                return out
-            caps = [min(c * 4, self.cfg.hard_cap) for c in caps]
-            if all(c >= self.cfg.hard_cap for c in caps[1:]):
-                raise EngineOverflow(
-                    f"node (src={source}, budget={budget}) exceeds hard_cap")
-        raise EngineOverflow("retry limit reached")
+        with self.obs.span("enumerate.node", src=source, budget=budget,
+                           reverse=reverse):
+            caps = self._plan_caps(reverse, source, budget, slack)
+            for _ in range(8):
+                out = self._run_node_once(reverse, source, budget, slack,
+                                          children, stop_vertex, caps)
+                if out is not None:
+                    return out
+                caps = [min(c * 4, self.cfg.hard_cap) for c in caps]
+                if all(c >= self.cfg.hard_cap for c in caps[1:]):
+                    raise EngineOverflow(
+                        f"node (src={source}, budget={budget}) exceeds "
+                        f"hard_cap")
+            raise EngineOverflow("retry limit reached")
 
     def _run_node_once(self, reverse, source, budget, slack, children,
                        stop_vertex, caps):
@@ -684,32 +743,44 @@ class BatchPathEngine:
         pools: list[list[PathSet]] = [[] for _ in range(budget + 1)]
         frontier = singleton(source, width)
         pools[0].append(frontier)
+        obs = self.obs
         for lvl in range(budget):
             if int(frontier.count) == 0:
                 break
-            out = expand_level(frontier.verts, frontier.count, ell_idx,
-                               prune_tbl, stop,
-                               level=lvl, budget=budget, out_cap=caps[lvl + 1],
-                               backend=self._kb)
-            if bool(out.frontier.overflow):
+            # per-level MS-BFS superstep: the overflow read is the level's
+            # host sync point, so the span charges the level's device work
+            # to itself even without fencing
+            with obs.span("msbfs.level", level=lvl,
+                          reverse=reverse) as sl:
+                out = expand_level(frontier.verts, frontier.count, ell_idx,
+                                   prune_tbl, stop,
+                                   level=lvl, budget=budget,
+                                   out_cap=caps[lvl + 1],
+                                   backend=self._kb)
+                sl.fence(out.frontier.verts)
+                overflow = bool(out.frontier.overflow)
+            if overflow:
                 return None
             for (csrc, cb, clevels) in children:
-                rmask = (out.splice_hit & (out.nbrs == csrc)).any(axis=1)
-                prefixes = extract_rows(frontier.verts, rmask,
-                                        out_cap=frontier.cap)
-                if int(prefixes.count) == 0:
-                    continue
-                for lam in range(0, min(cb, budget - lvl - 1) + 1):
-                    cl = clevels[lam]
-                    if int(cl.count) == 0:
+                with obs.span("join.splice", level=lvl):
+                    rmask = (out.splice_hit & (out.nbrs == csrc)).any(axis=1)
+                    prefixes = extract_rows(frontier.verts, rmask,
+                                            out_cap=frontier.cap)
+                    if int(prefixes.count) == 0:
                         continue
-                    res = self._retry_join(
-                        lambda cap: cross_join(
-                            prefixes.verts, prefixes.count, cl.verts, cl.count,
-                            p_col=lvl, c_col=lam, out_cap=cap, out_width=width,
-                            backend=self._kb),
-                        est=int(prefixes.count) * int(cl.count))
-                    pools[lvl + 1 + lam].append(res)
+                    for lam in range(0, min(cb, budget - lvl - 1) + 1):
+                        cl = clevels[lam]
+                        if int(cl.count) == 0:
+                            continue
+                        res = self._retry_join(
+                            lambda cap: cross_join(
+                                prefixes.verts, prefixes.count,
+                                cl.verts, cl.count,
+                                p_col=lvl, c_col=lam, out_cap=cap,
+                                out_width=width,
+                                backend=self._kb),
+                            est=int(prefixes.count) * int(cl.count))
+                        pools[lvl + 1 + lam].append(res)
             frontier = out.frontier
             pools[lvl + 1].append(out.frontier)
         merged = [concat(p) if p else empty(1, width) for p in pools]
@@ -800,11 +871,13 @@ class BatchPathEngine:
                 bs = bwd_levels[lam]
                 if int(bs.count) == 0:
                     continue
-                res = self._retry_join(
-                    lambda cap: keyed_join(sa, bs.verts, bs.count, a_col=a,
-                                           b_col=lam, out_cap=cap,
-                                           out_width=width, backend=self._kb),
-                    est=max(int(fa.count), int(bs.count)))
+                with self.obs.span("join.keyed", lam=lam):
+                    res = self._retry_join(
+                        lambda cap: keyed_join(sa, bs.verts, bs.count,
+                                               a_col=a, b_col=lam,
+                                               out_cap=cap, out_width=width,
+                                               backend=self._kb),
+                        est=max(int(fa.count), int(bs.count)))
                 if int(res.count):
                     outs.append(res)
                     found += int(res.count)
@@ -838,12 +911,13 @@ class BatchPathEngine:
                 bs = bwd_levels[lam]
                 if int(bs.count) == 0:
                     continue
-                total += self._retry_count(
-                    lambda cap: keyed_join_count(sa, bs.verts, bs.count,
-                                                 a_col=a, b_col=lam,
-                                                 pair_cap=cap,
-                                                 backend=self._kb),
-                    est=max(int(fa.count), int(bs.count)))
+                with self.obs.span("join.keyed", lam=lam, count=True):
+                    total += self._retry_count(
+                        lambda cap: keyed_join_count(sa, bs.verts, bs.count,
+                                                     a_col=a, b_col=lam,
+                                                     pair_cap=cap,
+                                                     backend=self._kb),
+                        est=max(int(fa.count), int(bs.count)))
                 if limit is not None and total >= limit:
                     return limit
         return total if limit is None else min(total, limit)

@@ -126,11 +126,14 @@ def msbfs_set_dist(esrc: jax.Array, edst: jax.Array, seed_mask: jax.Array,
     dist = jnp.where(seed[:, 0].astype(bool), jnp.int8(0), INF)
     frontier = seed
     for hop in range(1, k_max + 1):
-        reached = (dist < INF).astype(jnp.int8)
-        nxt = msbfs_hop(frontier, esrc, edst, n, edge_chunk, m_valid)
-        new = nxt * (1 - reached)[:, None]
-        dist = jnp.where(new[:, 0].astype(bool), jnp.int8(hop), dist)
-        frontier = new.at[n].set(0)
+        # named_scope tags this hop's HLO ops for profiler device
+        # timelines (metadata only: zero jaxpr eqns, budgets unaffected)
+        with jax.named_scope(f"msbfs.hop{hop}"):
+            reached = (dist < INF).astype(jnp.int8)
+            nxt = msbfs_hop(frontier, esrc, edst, n, edge_chunk, m_valid)
+            new = nxt * (1 - reached)[:, None]
+            dist = jnp.where(new[:, 0].astype(bool), jnp.int8(hop), dist)
+            frontier = new.at[n].set(0)
     return dist.at[n].set(INF)
 
 
@@ -152,11 +155,12 @@ def msbfs_dist(esrc: jax.Array, edst: jax.Array, sources: jax.Array,
     dist = dist.at[sources, jnp.arange(S)].min(jnp.int8(0))
     frontier = jnp.zeros((n + 1, S), jnp.int8).at[sources, jnp.arange(S)].set(1)
     for hop in range(1, k_max + 1):
-        reached = (dist < INF).astype(jnp.int8)
-        nxt = msbfs_hop(frontier, esrc, edst, n, edge_chunk, m_valid)
-        new = nxt * (1 - reached)                          # newly reached only
-        dist = jnp.where(new.astype(bool), jnp.int8(hop), dist)
-        frontier = new.at[n].set(0)
+        with jax.named_scope(f"msbfs.hop{hop}"):
+            reached = (dist < INF).astype(jnp.int8)
+            nxt = msbfs_hop(frontier, esrc, edst, n, edge_chunk, m_valid)
+            new = nxt * (1 - reached)                      # newly reached only
+            dist = jnp.where(new.astype(bool), jnp.int8(hop), dist)
+            frontier = new.at[n].set(0)
         # NOTE: no early exit under jit; k_max is small (<= 8 in the paper).
     return dist.at[n].set(INF)
 
@@ -207,10 +211,11 @@ def msbfs_dist_ell(ell_in_idx: jax.Array, sources: jax.Array,
     dist = jnp.full((n, W * 32), INF, jnp.int8)
     dist = dist.at[sources, cols].min(jnp.int8(0))
     for hop in range(1, k_max + 1):
-        frontier, visited, dist = msbfs_step(idx, frontier, visited, dist,
-                                             hop, backend=backend)
-        frontier = jnp.concatenate(
-            [frontier, jnp.zeros((1, W), jnp.uint32)], axis=0)
+        with jax.named_scope(f"msbfs.hop{hop}"):
+            frontier, visited, dist = msbfs_step(idx, frontier, visited,
+                                                 dist, hop, backend=backend)
+            frontier = jnp.concatenate(
+                [frontier, jnp.zeros((1, W), jnp.uint32)], axis=0)
     dist = dist[:, :S]                                     # drop word padding
     return jnp.concatenate([dist, jnp.full((1, S), INF, jnp.int8)], axis=0)
 
@@ -237,8 +242,9 @@ def msbfs_set_dist_ell(ell_in_idx: jax.Array, seed_mask: jax.Array,
     dist = jnp.full((n, 32), INF, jnp.int8)
     dist = dist.at[:, 0].set(jnp.where(seed[:n], jnp.int8(0), INF))
     for hop in range(1, k_max + 1):
-        frontier, visited, dist = msbfs_step(idx, frontier, visited, dist,
-                                             hop, backend=backend)
-        frontier = jnp.concatenate(
-            [frontier, jnp.zeros((1, 1), jnp.uint32)], axis=0)
+        with jax.named_scope(f"msbfs.hop{hop}"):
+            frontier, visited, dist = msbfs_step(idx, frontier, visited,
+                                                 dist, hop, backend=backend)
+            frontier = jnp.concatenate(
+                [frontier, jnp.zeros((1, 1), jnp.uint32)], axis=0)
     return jnp.concatenate([dist[:, 0], jnp.full((1,), INF, jnp.int8)])

@@ -29,6 +29,7 @@ from typing import Iterator, Optional, Sequence, Union
 import numpy as np
 
 from .pathset import PathSet
+from ..obs import trace as obstrace
 
 __all__ = ["Output", "Planner", "PathQuery", "QueryResult", "BatchReport",
            "PathsStore", "QueryLike", "midpoint_split"]
@@ -190,7 +191,8 @@ class PathsStore:
     @property
     def host(self) -> np.ndarray:
         if self._host is None:
-            self._host = np.asarray(self._pathset.verts[:self.count])
+            with obstrace.span("transfer.paths", rows=self.count):
+                self._host = np.asarray(self._pathset.verts[:self.count])
             self._pathset = None   # release the padded device buffer
         return self._host
 

@@ -58,6 +58,11 @@ class PathSession:
         to the engine config / ``REPRO_KERNEL_BACKEND`` env / platform
         auto-detection (see :mod:`repro.kernels.registry`). Ignored when
         wrapping an existing engine.
+    trace : record hierarchical stage spans into the process-wide
+        :mod:`repro.obs` tracer (``EngineConfig.trace`` override; see
+        ``docs/observability.md``). ``session.tracer.export(path)`` writes
+        the Chrome-trace JSON. Ignored when wrapping an existing engine;
+        None defers to the config.
     n_groups / policy / gamma / warm_bias_eps : streaming-server knobs,
         applied when the first query is submitted.
     """
@@ -68,6 +73,7 @@ class PathSession:
                  cache: Optional[SharedPathCache] = None,
                  mesh=None, n_devices: Optional[int] = None,
                  kernel_backend: Optional[str] = None,
+                 trace: Optional[bool] = None,
                  n_groups: int = 2, policy=None,
                  gamma: Optional[float] = None,
                  warm_bias_eps: float = 0.08):
@@ -80,6 +86,9 @@ class PathSession:
             if kernel_backend is not None:
                 config = dataclasses.replace(config or EngineConfig(),
                                              kernel_backend=kernel_backend)
+            if trace is not None:
+                config = dataclasses.replace(config or EngineConfig(),
+                                             trace=trace)
             self.engine = BatchPathEngine(graph, config, cache=cache)
         self.planner = Planner.coerce(planner)
         self._server = None
@@ -175,3 +184,10 @@ class PathSession:
     def kernel_backend(self) -> str:
         """The engine's resolved kernel backend ("pallas"|"interpret"|"jnp")."""
         return self.engine.kernel_backend.value
+
+    @property
+    def tracer(self):
+        """The engine's span tracer (:class:`repro.obs.trace.Tracer`) —
+        recording only when the session/engine was built with tracing on.
+        ``session.tracer.export(path)`` writes Chrome-trace JSON."""
+        return self.engine.obs

@@ -16,6 +16,7 @@ sample is validated against the oracle.
 from __future__ import annotations
 
 import argparse
+import copy
 import dataclasses
 import time
 from typing import Optional, Sequence
@@ -28,6 +29,7 @@ from ..core.query import PathQuery, Planner, QueryLike, QueryResult
 from ..core.clustering import cluster_queries
 from ..core.similarity import similarity_matrix
 from ..ft.scheduler import WorkStealingScheduler
+from ..obs import metrics as obsmetrics
 
 __all__ = ["AdmissionPolicy", "StreamingServer", "serve_batch",
            "warm_cluster_bias"]
@@ -218,82 +220,108 @@ class StreamingServer:
         self._waiting = self._waiting[self.policy.max_batch:]
         qids = [qid for qid, _, _ in batch]
         queries = [q for _, q, _ in batch]
-        t0 = time.perf_counter()
-        steals_before = self.sched.steals
-
-        index = build_index(self.engine.dg, [q.key for q in queries],
-                            backend=self.engine.kernel_backend.value)
-        mu = similarity_matrix(index, backend=self.engine.kernel_backend.value)
-        bias = warm_cluster_bias(self.engine, queries, self.warm_bias_eps)
-        # balance_clusters must act HERE, not just inside engine.run —
-        # the engine keeps an explicitly passed clustering verbatim, so a
-        # similar-traffic micro-batch merged to one cluster would idle
-        # every replica but one
-        min_clusters = 1
-        executor = self.engine.executor
-        if self.engine.cfg.balance_clusters and executor is not None:
-            min_clusters = executor.n_replicas
-        clusters = cluster_queries(mu, self.gamma, bias=bias,
-                                   min_clusters=min_clusters)
-        # scheduler items carry global qids so a requeued item from any
-        # earlier micro-batch still resolves to the right queries
-        # n_compiles / n_retraces stay 0 unless the engine runs with
-        # EngineConfig.log_compiles — then each batch_log entry shows
-        # whether this micro-batch hit warm XLA compiles (retraces == 0)
-        # or paid a trace (e.g. after a shape-bucket crossing)
-        agg = {"n_psi_nodes": 0, "n_materialized": 0,
-               "n_cache_hits": 0, "n_cache_misses": 0,
-               "n_compiles": 0, "n_retraces": 0}
-        per_device = None
-        executor = self.engine.executor
-        if executor is not None and executor.sharded:
-            # mesh-parallel serving: the executor's greedy cost-balanced
-            # placement replaces the host work-stealing loop — one run
-            # carries every (cache-aware) cluster, fanned across the
-            # per-device replicas and gathered back here
-            r = self.engine.run(queries, planner=Planner.BATCH,
-                                clusters=clusters)
-            for i, qid in enumerate(qids):
-                self.results[qid] = r[i].offload()
-            for key in agg:
-                agg[key] += r.stats.get(key, 0)
-            per_device = r.stats.get("per_device")
-        else:
-            cids = self.sched.submit([[qids[li] for li in cl]
-                                      for cl in clusters])
-            open_cids = set(cids)
-            while open_cids:
-                progressed = False
-                for grp in range(self.n_groups):
-                    item = self.sched.next_for(grp)
-                    if item is None:
-                        continue
-                    progressed = True
-                    sub = [self._query_of[qid] for qid in item.queries]
-                    # the item IS one cluster — pass it through so the
-                    # engine keeps our (cache-aware) grouping instead of
-                    # re-clustering
-                    r = self.engine.run(sub, planner=Planner.BATCH,
-                                        clusters=[list(range(len(sub)))])
-                    for i, qid in enumerate(item.queries):
-                        # results may sit untaken indefinitely — offload so
-                        # the backlog holds compact host rows, not padded
-                        # device buffers (count/exists results hold none)
-                        self.results[qid] = r[i].offload()
-                    for key in agg:
-                        agg[key] += r.stats.get(key, 0)
-                    self.sched.complete(item.cluster_id, True)
-                    open_cids.discard(item.cluster_id)
-                if not progressed and not any(
-                        cid in self.sched.in_flight for cid in open_cids):
-                    break   # nothing runnable (foreign in-flight work only)
-        wall = time.perf_counter() - t0
+        # admission wait: submit -> this batch boundary, per query
+        t_admit = time.monotonic()
+        waits = [t_admit - arr for _, _, arr in batch]
+        reg = obsmetrics.registry()
+        h_wait = reg.histogram("serve_admission_wait_s")
+        for w in waits:
+            h_wait.record(w)
+        with self.engine.obs.span("serve.batch",
+                                  n_queries=len(batch)) as sb:
+            steals_before = self.sched.steals
+            with self.engine.obs.span("serve.assemble",
+                                      n_queries=len(batch)) as sasm:
+                index = build_index(
+                    self.engine.dg, [q.key for q in queries],
+                    backend=self.engine.kernel_backend.value)
+                mu = similarity_matrix(
+                    index, backend=self.engine.kernel_backend.value)
+                bias = warm_cluster_bias(self.engine, queries,
+                                         self.warm_bias_eps)
+                # balance_clusters must act HERE, not just inside
+                # engine.run — the engine keeps an explicitly passed
+                # clustering verbatim, so a similar-traffic micro-batch
+                # merged to one cluster would idle every replica but one
+                min_clusters = 1
+                executor = self.engine.executor
+                if self.engine.cfg.balance_clusters and executor is not None:
+                    min_clusters = executor.n_replicas
+                clusters = cluster_queries(mu, self.gamma, bias=bias,
+                                           min_clusters=min_clusters)
+            # scheduler items carry global qids so a requeued item from
+            # any earlier micro-batch still resolves to the right queries
+            # n_compiles / n_retraces stay 0 unless the engine runs with
+            # EngineConfig.log_compiles — then each batch_log entry shows
+            # whether this micro-batch hit warm XLA compiles (retraces ==
+            # 0) or paid a trace (e.g. after a shape-bucket crossing)
+            agg = {"n_psi_nodes": 0, "n_materialized": 0,
+                   "n_cache_hits": 0, "n_cache_misses": 0,
+                   "n_compiles": 0, "n_retraces": 0}
+            per_device = None
+            executor = self.engine.executor
+            if executor is not None and executor.sharded:
+                # mesh-parallel serving: the executor's greedy
+                # cost-balanced placement replaces the host work-stealing
+                # loop — one run carries every (cache-aware) cluster,
+                # fanned across the per-device replicas and gathered back
+                r = self.engine.run(queries, planner=Planner.BATCH,
+                                    clusters=clusters)
+                for i, qid in enumerate(qids):
+                    self.results[qid] = r[i].offload()
+                for key in agg:
+                    agg[key] += r.stats.get(key, 0)
+                per_device = r.stats.get("per_device")
+            else:
+                cids = self.sched.submit([[qids[li] for li in cl]
+                                          for cl in clusters])
+                open_cids = set(cids)
+                while open_cids:
+                    progressed = False
+                    for grp in range(self.n_groups):
+                        item = self.sched.next_for(grp)
+                        if item is None:
+                            continue
+                        progressed = True
+                        sub = [self._query_of[qid] for qid in item.queries]
+                        # the item IS one cluster — pass it through so the
+                        # engine keeps our (cache-aware) grouping instead
+                        # of re-clustering
+                        r = self.engine.run(sub, planner=Planner.BATCH,
+                                            clusters=[list(range(len(sub)))])
+                        for i, qid in enumerate(item.queries):
+                            # results may sit untaken indefinitely —
+                            # offload so the backlog holds compact host
+                            # rows, not padded device buffers (count/
+                            # exists results hold none)
+                            self.results[qid] = r[i].offload()
+                        for key in agg:
+                            agg[key] += r.stats.get(key, 0)
+                        self.sched.complete(item.cluster_id, True)
+                        open_cids.discard(item.cluster_id)
+                    if not progressed and not any(
+                            cid in self.sched.in_flight for cid in open_cids):
+                        break   # nothing runnable (foreign in-flight only)
+        wall = sb.duration
+        # end-to-end latency: submit -> results resident, per query
+        t_done = time.monotonic()
+        e2e = [t_done - arr for _, _, arr in batch]
+        h_e2e = reg.histogram("serve_query_e2e_s")
+        for v in e2e:
+            h_e2e.record(v)
         Q = len(queries)
         self.batch_log.append({
             "wall_s": wall, "n_queries": Q, "n_clusters": len(clusters),
             "kernel_backend": self.engine.kernel_backend.value,
             "steals": self.sched.steals - steals_before,
             "warm_biased": bias is not None,
+            # micro-batch assembly (index + similarity + clustering) and
+            # the per-query latency shape of this admission window
+            "t_assemble_s": sasm.duration,
+            "admission_wait_p50_s": float(np.percentile(waits, 50)),
+            "admission_wait_max_s": float(max(waits)),
+            "e2e_p50_s": float(np.percentile(e2e, 50)),
+            "e2e_p99_s": float(np.percentile(e2e, 99)),
             "mu_mean": float((mu.sum() - Q) / max(Q * (Q - 1), 1)),
             # graph deltas applied since the previous micro-batch
             "n_deltas": len(deltas),
@@ -330,7 +358,11 @@ def serve_batch(engine: BatchPathEngine, queries, n_groups: int = 2,
     for q in queries:
         srv.submit(q)
     srv.drain()
-    info = dict(srv.batch_log[-1]) if srv.batch_log else {"wall_s": 0.0}
+    # deep copy: batch_log entries hold nested dicts (cache info,
+    # per-device stats) that later batches/deltas keep mutating — a
+    # shallow dict() would alias them into the returned snapshot
+    info = copy.deepcopy(srv.batch_log[-1]) if srv.batch_log \
+        else {"wall_s": 0.0}
     return srv.results, info
 
 
@@ -351,6 +383,13 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=0,
                     help="shard over the first N local devices (0 = plain "
                          "single-device; see docs/serving.md §Sharded)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="record stage spans and export a Chrome-trace "
+                         "JSON here at exit (open in chrome://tracing or "
+                         "ui.perfetto.dev; see docs/observability.md)")
+    ap.add_argument("--jax-profile", metavar="DIR", default=None,
+                    help="capture a jax.profiler trace of the serving "
+                         "rounds into this TensorBoard logdir")
     args = ap.parse_args()
     if args.rounds < 1:
         ap.error("--rounds must be >= 1")
@@ -359,16 +398,20 @@ def main() -> None:
                              avg_deg=6.0, seed=0)
     engine = BatchPathEngine(g, EngineConfig(
         min_cap=128, cache_bytes=args.cache_mb << 20,
-        n_devices=args.devices or None))
+        n_devices=args.devices or None,
+        trace=args.trace is not None,
+        trace_annotations=args.jax_profile is not None))
     queries = generators.similar_queries(g, args.queries, args.similarity,
                                          (args.k_min, args.k_max), seed=1)
     srv = StreamingServer(engine, n_groups=args.groups,
                           policy=AdmissionPolicy(max_batch=args.max_batch,
                                                  max_delay_s=0.0))
+    from ..obs import jaxprof
     qids_by_round = []
-    for _ in range(args.rounds):
-        qids_by_round.append([srv.submit(q) for q in queries])
-        srv.drain()
+    with jaxprof.profile_run(args.jax_profile):
+        for _ in range(args.rounds):
+            qids_by_round.append([srv.submit(q) for q in queries])
+            srv.drain()
     for bi, b in enumerate(srv.batch_log):
         cache = b.get("cache", {})
         print(f"batch {bi}: {b['n_queries']} queries, "
@@ -391,6 +434,14 @@ def main() -> None:
             assert path_set(srv.results[round_qids[qi]].paths) == truth
     print(f"validated {args.validate} queries against the oracle "
           f"(all {args.rounds} rounds): OK")
+    if args.trace:
+        doc = engine.obs.export(args.trace)
+        n_spans = sum(1 for e in doc["traceEvents"] if e.get("ph") == "X")
+        e2e = obsmetrics.registry().histogram("serve_query_e2e_s")
+        print(f"trace: {n_spans} spans -> {args.trace} "
+              f"(python -m repro.obs summarize {args.trace}); "
+              f"e2e p50={e2e.quantile(0.5) * 1e3:.1f}ms "
+              f"p99={e2e.quantile(0.99) * 1e3:.1f}ms")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,144 @@
+"""Opt-in ``jax.profiler`` integration for :mod:`repro.obs`.
+
+Everything here degrades to a no-op when jax (or the profiler plugin) is
+unavailable, so the zero-dep tracer/metrics layers never grow a hard jax
+edge. Three capabilities:
+
+* **Span annotations on the device timeline** — :func:`attach` installs a
+  ``jax.profiler.TraceAnnotation`` factory on a tracer, so every host
+  span also shows up as a named region in a ``start_trace``-captured
+  profile (TensorBoard / Perfetto), lining host stages up against the
+  XLA device timeline. ``trace.enable(annotate=True)`` does this for the
+  process tracer. Inside jitted code, per-level attribution instead
+  comes from ``jax.named_scope`` metadata (see ``core/msbfs.py``) —
+  named scopes ride the HLO op names and add no jaxpr equations, so the
+  committed dispatch budgets are unaffected.
+* **Whole-run capture** — :func:`start_trace` / :func:`stop_trace` (or
+  the :func:`profile_run` context manager) bracket a run with the XLA
+  profiler writing to a TensorBoard logdir; ``serve --jax-profile DIR``
+  wires this around the streaming loop.
+* **Device-memory sampling** — :func:`sample_device_memory` reads
+  ``device.memory_stats()`` into the ``device_bytes_in_use`` gauge
+  (labeled per device) and :func:`save_memory_profile` dumps the full
+  ``device_memory_profile`` pprof blob for offline digging. CPU backends
+  often report no memory stats; both return ``None`` rather than raise.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+from . import metrics as _metrics
+from . import trace as _trace
+
+__all__ = ["available", "annotation", "annotation_factory", "attach",
+           "detach", "start_trace", "stop_trace", "profile_run",
+           "sample_device_memory", "save_memory_profile"]
+
+
+def _profiler():
+    try:
+        import jax.profiler as prof
+        return prof
+    except Exception:
+        return None
+
+
+def available() -> bool:
+    """True when ``jax.profiler`` can be imported."""
+    return _profiler() is not None
+
+
+def annotation_factory():
+    """Return a ``name -> context manager`` factory for span annotation
+    (``TraceAnnotation`` when available, else null contexts)."""
+    prof = _profiler()
+    if prof is not None and hasattr(prof, "TraceAnnotation"):
+        return prof.TraceAnnotation
+    return lambda name: contextlib.nullcontext()
+
+
+def annotation(name: str):
+    """A single named annotation context (convenience wrapper)."""
+    return annotation_factory()(name)
+
+
+def attach(tracer: Optional[_trace.Tracer] = None) -> _trace.Tracer:
+    """Install the annotation factory on ``tracer`` (default: the process
+    tracer), so recorded spans also appear on profiler timelines."""
+    tr = tracer if tracer is not None else _trace.tracer()
+    tr.annotator = annotation_factory()
+    return tr
+
+
+def detach(tracer: Optional[_trace.Tracer] = None) -> _trace.Tracer:
+    tr = tracer if tracer is not None else _trace.tracer()
+    tr.annotator = None
+    return tr
+
+
+def start_trace(logdir: str) -> bool:
+    """Start an XLA profiler capture into a TensorBoard logdir; returns
+    False (no-op) when the profiler is unavailable."""
+    prof = _profiler()
+    if prof is None:
+        return False
+    prof.start_trace(logdir)
+    return True
+
+
+def stop_trace() -> None:
+    prof = _profiler()
+    if prof is not None:
+        prof.stop_trace()
+
+
+@contextlib.contextmanager
+def profile_run(logdir: Optional[str]):
+    """Bracket a block with start/stop_trace when ``logdir`` is set."""
+    started = bool(logdir) and start_trace(logdir)
+    try:
+        yield started
+    finally:
+        if started:
+            stop_trace()
+
+
+def sample_device_memory(reg: Optional[_metrics.MetricsRegistry] = None
+                         ) -> Optional[int]:
+    """Sample per-device bytes-in-use into ``device_bytes_in_use`` gauges.
+
+    Returns the total bytes across devices, or ``None`` when no device
+    reports memory stats (typical for the CPU backend).
+    """
+    try:
+        import jax
+        devices = jax.devices()
+    except Exception:
+        return None
+    reg = reg if reg is not None else _metrics.registry()
+    total = None
+    for d in devices:
+        try:
+            stats = d.memory_stats()
+        except Exception:
+            stats = None
+        if not stats:
+            continue
+        used = stats.get("bytes_in_use")
+        if used is None:
+            continue
+        reg.gauge("device_bytes_in_use", device=str(d)).set(used)
+        total = (total or 0) + int(used)
+    return total
+
+
+def save_memory_profile(path: str) -> bool:
+    """Write the pprof-format ``device_memory_profile`` blob to ``path``."""
+    prof = _profiler()
+    if prof is None:
+        return False
+    blob = prof.device_memory_profile()
+    with open(path, "wb") as f:
+        f.write(blob)
+    return True

@@ -1,4 +1,4 @@
-"""repro.analysis: AST lint rules (RPL000-RPL005), waiver parsing, the
+"""repro.analysis: AST lint rules (RPL000-RPL006), waiver parsing, the
 jaxpr audit self-tests, the committed dispatch budgets, and the int8
 k_max guard (the static bound that replaced the silent runtime clamp)."""
 import json
@@ -92,6 +92,48 @@ class TestRules:
     def test_rpl005_exempt_in_graph_py(self):
         src = "def pow2_ceil(k):\n    return 2 ** k\n"
         assert lint_source(src, "core/graph.py") == []
+
+    def test_rpl006_perf_counter_in_timed_module(self):
+        src = ("import time\n"
+               "def run_batch(qs):\n"
+               "    t0 = time.perf_counter()\n"
+               "    return t0\n")
+        fs = lint_source(src, "core/engine.py")
+        assert _rules(fs) == ["RPL006"]
+        assert fs[0].line == 3 and not fs[0].waived
+
+    def test_rpl006_bare_import_form(self):
+        src = ("from time import perf_counter\n"
+               "def admit(batch):\n"
+               "    return perf_counter()\n")
+        assert _rules(lint_source(src, "launch/serve.py")) == ["RPL006"]
+
+    def test_rpl006_exempt_in_obs(self):
+        # obs/ is the blessed definition site — the span implementation
+        # necessarily reads the clock
+        src = ("import time\n"
+               "def now():\n"
+               "    return time.perf_counter()\n")
+        assert lint_source(src, "obs/trace.py") == []
+
+    def test_rpl006_not_applied_outside_timed_modules(self):
+        # ft/driver.py times external subprocess restarts, not pipeline
+        # stages — deliberately off TIMED_MODULE_PATTERNS
+        src = ("import time\n"
+               "def wait(p):\n"
+               "    return time.perf_counter()\n")
+        assert lint_source(src, "ft/driver.py") == []
+        assert lint_source(src, "launch/dryrun.py") == []
+
+    def test_rpl006_waivable(self):
+        src = ("import time\n"
+               "def run(qs):\n"
+               "    t0 = time.perf_counter()  "
+               "# repro-lint: waive[RPL006] clock calibration, not a stage\n"
+               "    return t0\n")
+        fs = lint_source(src, "core/engine.py")
+        assert len(fs) == 1 and fs[0].waived
+        assert fs[0].waiver_reason == "clock calibration, not a stage"
 
     def test_rpl000_malformed_waiver(self):
         src = "x = 1  # repro-lint: waive[RPL999] not a known rule\n"
