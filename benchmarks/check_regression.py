@@ -181,6 +181,66 @@ def check_static(budgets: Path | None) -> None:
             f"within committed dispatch budgets")
 
 
+def check_routing(current: dict, baseline: dict | None,
+                  min_speedup: float, max_regression: float) -> None:
+    """Gate the cost-routing contract (results/BENCH_routing.json from
+    exp12): AUTO must be result-equal to the forced planners, actually
+    route both GREEN and YELLOW on the mixed workload, add zero warm
+    retraces, keep the lone-query admission wait inside the deadline
+    bound, and not lose to the best single global planner (both arms
+    measured in the SAME run, so the speedup gate is machine-relative)."""
+    if not current.get("parity_ok", False):
+        _fail("AUTO results differ from forced planners (parity broken)")
+    else:
+        _ok("AUTO == forced planners on every output kind")
+    if current.get("warm_retraces", -1) != 0:
+        _fail(f"routing retraced the warm loop: "
+              f"{current.get('warm_retraces')}")
+    else:
+        _ok("routed warm loop retraces: 0")
+    routed = current.get("routed", {})
+    if routed.get("green", 0) <= 0 or routed.get("yellow", 0) <= 0:
+        _fail(f"mixed workload did not exercise both tiers: {routed}")
+    else:
+        _ok(f"routed green={routed['green']} yellow={routed['yellow']} "
+            f"red={routed.get('red', 0)}")
+    if not current.get("fast_path_ok", False):
+        _fail("exists-only query did not resolve via the submit fast path")
+    else:
+        _ok("streaming fast path answered exists at submit")
+    wait, bound = (current.get("admission_wait_max_s"),
+                   current.get("admission_bound_s"))
+    if wait is None or bound is None:
+        _fail("admission_wait_max_s / admission_bound_s missing")
+    elif wait > bound:
+        _fail(f"lone-query admission wait {wait:.3f}s exceeds deadline "
+              f"bound {bound:.3f}s")
+    else:
+        _ok(f"admission wait {wait:.3f}s <= bound {bound:.3f}s")
+    speedup = current.get("speedup_vs_best_single", 0.0)
+    if speedup < min_speedup:
+        _fail(f"AUTO speedup {speedup:.2f}x vs best single planner < "
+              f"required {min_speedup:.2f}x")
+    else:
+        _ok(f"AUTO {speedup:.2f}x vs best single planner "
+            f"(>= {min_speedup:.2f}x)")
+    # latency tripwire vs the committed smoke baseline
+    if baseline is None or max_regression <= 0:
+        print("  (routing latency gate skipped)")
+        return
+    cur, base = current.get("t_auto_s"), baseline.get("t_auto_s")
+    if cur is None or base is None:
+        _fail("t_auto_s missing from current or baseline routing json")
+        return
+    limit = base * (1.0 + max_regression)
+    if cur > limit:
+        _fail(f"AUTO wall regressed: {cur * 1e3:.1f}ms vs baseline "
+              f"{base * 1e3:.1f}ms (limit {limit * 1e3:.1f}ms)")
+    else:
+        _ok(f"AUTO wall {cur * 1e3:.1f}ms <= {limit * 1e3:.1f}ms "
+            f"(baseline {base * 1e3:.1f}ms + {max_regression:.0%})")
+
+
 def check_sharded(current: dict, min_speedup: float) -> None:
     if not current.get("equal", False):
         _fail("sharded results are NOT equal to single-device")
@@ -237,12 +297,21 @@ def main() -> None:
     ap.add_argument("--static-budgets", type=Path, default=None,
                     help="DISPATCH_BUDGETS.json path (default: "
                          "benchmarks/baselines/DISPATCH_BUDGETS.json)")
+    ap.add_argument("--routing", type=Path, default=None,
+                    help="this run's results/BENCH_routing.json (cost-"
+                         "routing parity/retrace/admission/speedup gate)")
+    ap.add_argument("--routing-baseline", type=Path, default=None,
+                    help="committed BENCH_routing baseline json (optional; "
+                         "adds the AUTO-wall latency tripwire)")
+    ap.add_argument("--min-routing-speedup", type=float, default=1.0,
+                    help="required AUTO speedup vs the best single global "
+                         "planner (same-run, machine-relative)")
     args = ap.parse_args()
     if (args.current is None and args.sharded is None
             and args.kernels is None and args.obs is None
-            and not args.static):
+            and args.routing is None and not args.static):
         ap.error("nothing to check: pass --current, --sharded, --kernels, "
-                 "--obs and/or --static")
+                 "--obs, --routing and/or --static")
 
     if args.current is not None:
         if args.baseline is None:
@@ -265,6 +334,14 @@ def main() -> None:
     if args.obs is not None:
         print(f"obs: {args.obs}")
         check_obs(json.loads(args.obs.read_text()), args.max_obs_overhead)
+    if args.routing is not None:
+        print(f"routing: {args.routing}"
+              + (f" vs baseline {args.routing_baseline}"
+                 if args.routing_baseline else ""))
+        base = (json.loads(args.routing_baseline.read_text())
+                if args.routing_baseline else None)
+        check_routing(json.loads(args.routing.read_text()), base,
+                      args.min_routing_speedup, args.max_regression)
     if args.static:
         print("static: jaxpr audit vs committed dispatch budgets")
         check_static(args.static_budgets)

@@ -1,0 +1,167 @@
+"""Exp-12: cost-routed adaptive planning on mixed-complexity batches.
+
+One-size-fits-all planning leaves the most time on the table exactly
+where real traffic lives: a batch mixing heavy similar path queries
+(where the batch machinery's sharing pays) with trivial exists/short-k/
+limited queries (where that machinery's overhead dominates). This
+experiment runs the *same* mixed batch under ``Planner.AUTO`` and every
+forced global planner and reports
+
+  * warm wall per planner and AUTO's speedup vs. the best single global
+    choice (the headline: routing must not lose to any one-flag setting),
+  * routing decisions (``routed_green|yellow|red``) and result parity —
+    AUTO must be bit-equal to the forced planners on every output kind,
+  * zero warm retraces: routing may not perturb the stable-shape serving
+    contract,
+  * the streaming segment: the AdmissionPolicy deadline fix bounds a lone
+    query's admission wait by ``max_delay_s + one pump interval``, and
+    exists-only queries resolve at submit via the AUTO fast path.
+
+``check_regression --routing`` gates the emitted BENCH_routing.json.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro.core import (BatchPathEngine, EngineConfig, PathQuery,
+                        RouterConfig, generators)
+from repro.launch.serve import AdmissionPolicy, StreamingServer
+from .common import record
+
+# workload-tuned GREEN threshold: trivial short-k queries on the bench
+# community graphs cost O(10^2), heavy k=4-5 similar queries O(10^3) —
+# 512 separates the two regimes (the RouterConfig default is sized for
+# larger graphs, where heavy balls clear it on their own)
+ROUTER = RouterConfig(green_max_cost=512.0)
+PUMP_INTERVAL_S = 0.05
+SCHED_SLACK_S = 0.25     # generous CI scheduling slack on the wait bound
+
+
+def _mixed_workload(g, scale: float):
+    n_heavy = max(8, int(16 * min(scale, 1.0)))
+    n_triv = max(8, int(16 * min(scale, 1.0)))
+    heavy = [PathQuery(s, t, k) for s, t, k in
+             generators.similar_queries(g, n_heavy, similarity=0.7,
+                                        k_range=(4, 5), seed=5)]
+    triv = generators.random_queries(g, n_triv, (2, 3), seed=6)
+    exists = [PathQuery(s, t, k, output="exists") for s, t, k in triv]
+    lim = [PathQuery(s, t, k, output="count", limit=2) for s, t, k in
+           generators.random_queries(g, n_triv, (3, 4), seed=7)]
+    # interleave so clustering sees the mix the way admission would
+    out = []
+    for i in range(max(len(heavy), len(exists), len(lim))):
+        for fam in (heavy, exists, lim):
+            if i < len(fam):
+                out.append(fam[i])
+    return out
+
+
+def _assert_parity(ra, rb, queries, tag):
+    for qi, q in enumerate(queries):
+        if q.output.value == "paths" and q.limit is None:
+            assert set(map(tuple, ra[qi].paths)) \
+                == set(map(tuple, rb[qi].paths)), f"{tag} q{qi}"
+        elif q.output.value == "count":
+            assert ra[qi].count == rb[qi].count, f"{tag} q{qi}"
+        assert ra[qi].exists == rb[qi].exists, f"{tag} q{qi}"
+
+
+def _timed(engine, queries, planner, repeats=3):
+    engine.run(queries, planner=planner)        # pay jit compiles here
+    best, stats, retraces = None, None, 0
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = engine.run(queries, planner=planner)
+        dt = time.perf_counter() - t0
+        if best is None or dt < best:
+            best, stats = dt, res.stats
+        retraces += res.stats.get("n_retraces", 0)
+    return best, stats, retraces, res
+
+
+def main(scale: float = 1.0) -> dict:
+    n = max(400, int(6000 * scale))
+    g = generators.community(n, n_comm=max(2, n // 1500), avg_deg=6.0,
+                             seed=4)
+    queries = _mixed_workload(g, scale)
+    eng = BatchPathEngine(g, EngineConfig(min_cap=128, log_compiles=True,
+                                          router=ROUTER))
+
+    times, reports, warm_retraces = {}, {}, {}
+    for planner in ("auto", "batch", "basic"):
+        times[planner], stats, warm_retraces[planner], reports[planner] = \
+            _timed(eng, queries, planner)
+        record(f"exp12_{planner}", times[planner] * 1e6 / len(queries),
+               f"wall={times[planner] * 1e3:.1f}ms "
+               f"retraces={warm_retraces[planner]}")
+
+    # routing is a wall-time lever only: results must be planner-equal
+    _assert_parity(reports["auto"], reports["batch"], queries, "auto/batch")
+    _assert_parity(reports["auto"], reports["basic"], queries, "auto/basic")
+    auto_stats = reports["auto"].stats
+    routed = {r: auto_stats[f"routed_{r}"]
+              for r in ("green", "yellow", "red")}
+    assert sum(routed.values()) == len(queries)
+    assert routed["green"] > 0, "mixed workload routed nothing GREEN"
+    assert routed["yellow"] > 0, "mixed workload routed nothing YELLOW"
+    total_warm_retraces = sum(warm_retraces.values())
+    assert total_warm_retraces == 0, (
+        f"routing perturbed warm shapes: {warm_retraces}")
+
+    best_single = min(times["batch"], times["basic"])
+    speedup_best = best_single / max(times["auto"], 1e-9)
+    speedup_yellow = times["batch"] / max(times["auto"], 1e-9)
+    record("exp12_speedup_vs_best_single", speedup_best,
+           f"best_single={'batch' if times['batch'] <= times['basic'] else 'basic'}")
+    record("exp12_speedup_vs_yellow", speedup_yellow,
+           f"green={routed['green']} yellow={routed['yellow']}")
+
+    # -- streaming segment: deadline-bounded admission + AUTO fast path --
+    srv = StreamingServer(eng, planner="auto",
+                          policy=AdmissionPolicy(min_batch=8, max_batch=32,
+                                                 max_delay_s=0.2))
+    heavy = next(q for q in queries if q.output.value == "paths")
+    srv.submit(heavy)                 # lone sub-min_batch query: must not starve
+    deadline = time.monotonic() + 10.0
+    while not srv.batch_log and time.monotonic() < deadline:
+        srv.pump()
+        time.sleep(PUMP_INTERVAL_S)
+    assert srv.batch_log, "lone query starved past the admission deadline"
+    wait_max = srv.batch_log[-1]["admission_wait_max_s"]
+    admission_bound = 0.2 + PUMP_INTERVAL_S + SCHED_SLACK_S
+    assert wait_max <= admission_bound, (
+        f"admission wait {wait_max:.3f}s exceeds bound {admission_bound:.3f}s")
+    ex = next(q for q in queries if q.output.value == "exists")
+    qid = srv.submit(ex)
+    fast_path_ok = qid in srv.results and srv.n_fast_path == 1
+    assert fast_path_ok, "exists query did not take the submit fast path"
+    record("exp12_admission_wait_max", wait_max * 1e6,
+           f"bound={admission_bound:.3f}s fast_path={int(fast_path_ok)}")
+
+    summary = {
+        "n": n, "n_queries": len(queries),
+        "t_auto_s": times["auto"], "t_batch_s": times["batch"],
+        "t_basic_s": times["basic"],
+        "speedup_vs_best_single": speedup_best,
+        "speedup_vs_yellow": speedup_yellow,
+        "routed": routed,
+        "warm_retraces": total_warm_retraces,
+        "parity_ok": True,
+        "admission_wait_max_s": wait_max,
+        "admission_bound_s": admission_bound,
+        "fast_path_ok": fast_path_ok,
+        "green_max_cost": ROUTER.green_max_cost,
+    }
+    # the committed artifact records the full-scale workload; tiny smoke
+    # runs (CI) must not clobber it — they write under results/ instead
+    out = (Path("BENCH_routing.json") if scale >= 1.0
+           else Path("results/BENCH_routing.json"))
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(summary, indent=1, default=str))
+    return summary
+
+
+if __name__ == "__main__":
+    main()

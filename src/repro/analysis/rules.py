@@ -73,6 +73,7 @@ TIMED_MODULE_PATTERNS: Tuple[str, ...] = HOT_MODULE_PATTERNS + (
     "core/distributed.py",
     "core/delta.py",
     "core/cache.py",
+    "core/planner.py",
     "core/session.py",
     "launch/serve.py",
 )

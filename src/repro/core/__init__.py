@@ -5,16 +5,18 @@ from .cache import SharedPathCache
 from .query import (PathQuery, QueryResult, BatchReport, Planner, Output,
                     QueryLike)
 from .engine import BatchPathEngine, EngineConfig, EngineOverflow, BatchResult
+from .planner import CostEstimate, CostRouter, Route, RouterConfig
 from .session import PathSession
 from .index import build_index, QueryIndex
 from .compilelog import CompileLog
 from .distributed import ShardedExecutor
-from . import compilelog, distributed, generators, oracle
+from . import compilelog, distributed, generators, oracle, planner
 
 __all__ = ["Graph", "DeviceGraph", "GraphDelta", "AppliedDelta",
            "BatchPathEngine", "EngineConfig",
            "EngineOverflow", "BatchResult", "SharedPathCache",
            "PathQuery", "QueryResult", "BatchReport", "Planner", "Output",
            "QueryLike", "PathSession", "CompileLog", "ShardedExecutor",
+           "CostEstimate", "CostRouter", "Route", "RouterConfig",
            "build_index", "QueryIndex", "compilelog", "distributed",
-           "generators", "oracle"]
+           "generators", "oracle", "planner"]

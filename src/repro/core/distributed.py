@@ -44,10 +44,12 @@ import numpy as np
 
 from .graph import DeviceGraph, Graph, pad_edge_list, pow2_ceil
 from .query import midpoint_split
+from ..obs import metrics as obsmetrics
 
 __all__ = ["shard_edges", "distributed_graph", "shard_graph_edges",
            "resolve_mesh", "edge_bucket_for", "replicate_graph",
-           "cluster_costs", "plan_clusters", "ShardedExecutor"]
+           "query_ball_cost", "cluster_costs", "plan_clusters",
+           "ShardedExecutor"]
 
 # every device-resident array field of a DeviceGraph (the placement unit)
 _DG_ARRAYS = ("esrc", "edst", "ell_idx", "ell_mask",
@@ -157,31 +159,42 @@ def replicate_graph(dg: DeviceGraph, device) -> DeviceGraph:
 # ----------------------------------------------------------------------
 # cluster placement (the data-parallel enumeration layer)
 # ----------------------------------------------------------------------
+def query_ball_cost(index, qi: int, dists: tuple) -> float:
+    """Estimated enumeration cost of one query:
+    ``k × (|ball_a(s)| + |ball_b(t)|)``, where the balls count vertices
+    within the midpoint-split hop budgets of each endpoint — a
+    frontier-size estimate read straight from the index distance
+    matrices (``dists`` = host ``(dist_s, dist_t)``, sentinel row
+    included; sliced off here). The shared per-query term of both LPT
+    placement (:func:`cluster_costs`) and GREEN/YELLOW/RED routing
+    (:class:`repro.core.planner.CostRouter`). Deliberately cheap:
+    callers need relative weight, not the exact DP bound.
+    """
+    ds, dt = dists[0][:-1], dists[1][:-1]
+    _, _, k = index.queries[qi]
+    a, b = midpoint_split(k)
+    ball = int((ds[:, index.src_col[qi]] <= a).sum()) \
+        + int((dt[:, index.tgt_col[qi]] <= b).sum())
+    return float(k) * float(ball)
+
+
 def cluster_costs(index, clusters: Sequence[Sequence[int]],
                   dists: Optional[tuple] = None) -> list[float]:
-    """Estimated enumeration cost per cluster.
+    """Estimated enumeration cost per cluster:
+    ``cost(C) = Σ_{q ∈ C} query_ball_cost(q)``.
 
-    cost(C) = Σ_{q ∈ C} k_q × (|ball_a(s_q)| + |ball_b(t_q)|), where the
-    balls count vertices within the midpoint-split hop budgets of each
-    endpoint — a frontier-size estimate read straight from the index
-    distance matrices (``dists`` is the engine's host memo ``(dist_s,
-    dist_t)``; transferred here once when not supplied). Deliberately
-    cheap: placement needs relative weight, not the exact DP bound.
+    ``dists`` is the engine's host memo ``(dist_s, dist_t)``; pass it on
+    every hot-path call — the ``dists is None`` fallback transfers both
+    matrices device→host each time, which the
+    ``host_dist_transfers_total`` counter makes visible (the streaming
+    loop gates on it staying flat).
     """
     if dists is None:
+        obsmetrics.registry().counter("host_dist_transfers_total",
+                                      site="cluster_costs").inc()
         dists = (np.asarray(index.dist_s), np.asarray(index.dist_t))
-    ds, dt = dists[0][:-1], dists[1][:-1]
-    costs = []
-    for cl in clusters:
-        c = 0.0
-        for qi in cl:
-            _, _, k = index.queries[qi]
-            a, b = midpoint_split(k)
-            ball = int((ds[:, index.src_col[qi]] <= a).sum()) \
-                + int((dt[:, index.tgt_col[qi]] <= b).sum())
-            c += float(k) * float(ball)
-        costs.append(c)
-    return costs
+    return [sum(query_ball_cost(index, qi, dists) for qi in cl)
+            for cl in clusters]
 
 
 def plan_clusters(costs: Sequence[float],
@@ -195,14 +208,17 @@ def plan_clusters(costs: Sequence[float],
     order within a replica is deterministic) and ``loads[r]`` the summed
     cost. Handles every uneven shape: more clusters than replicas (some
     replicas take several), fewer (trailing replicas stay empty), zero
-    clusters (all empty).
+    clusters (all empty). Load ties break on assignment *count* (then
+    replica id) rather than always replica 0, so zero-cost clusters
+    spread round-robin instead of serializing on one replica.
     """
     n_replicas = max(int(n_replicas), 1)
     order = sorted(range(len(costs)), key=lambda i: (-costs[i], i))
     assign: list[list[int]] = [[] for _ in range(n_replicas)]
     loads = [0.0] * n_replicas
     for ci in order:
-        r = loads.index(min(loads))
+        r = min(range(n_replicas),
+                key=lambda i: (loads[i], len(assign[i]), i))
         assign[r].append(ci)
         loads[r] += costs[ci]
     for a in assign:
@@ -321,22 +337,32 @@ class ShardedExecutor:
 
     # -- execution -----------------------------------------------------
     def run_clusters(self, queries, index, plus: bool, min_sb: int,
-                     clusters: list[list[int]], stats: dict) -> dict:
+                     clusters: list[list[int]], stats: dict,
+                     planners: Optional[Sequence[str]] = None) -> dict:
         """Execute every sharing cluster, gathering ``{qi: QueryResult}``.
 
         One replica (or a single cluster): the inline sequential loop —
         byte-for-byte the single-device engine. Several: clusters are
         cost-balanced onto replicas and executed by one pinned worker
         thread per replica; per-replica stats land in
-        ``stats["per_device"]``. Results are exact either way, so the
-        gather is a plain dict merge.
+        ``stats["per_device"]``. ``planners`` (one ``"batch"``/``"basic"``
+        entry per cluster, from the cost router) picks the per-cluster
+        plan — ``"basic"`` runs the direct per-query path with no Ψ
+        detection; ``None`` means batch everywhere. Results are exact
+        either way, so the gather is a plain dict merge.
         """
         eng = self.engine
+
+        def cluster_fn(engine, ci: int):
+            if planners is not None and planners[ci] == "basic":
+                return engine._cluster_basic
+            return engine._cluster_work
+
         if not self.sharded or len(clusters) <= 1:
             results: dict = {}
-            for cluster in clusters:
-                out, cstats = eng._cluster_work(queries, index, plus,
-                                                min_sb, cluster)
+            for ci, cluster in enumerate(clusters):
+                out, cstats = cluster_fn(eng, ci)(queries, index, plus,
+                                                  min_sb, cluster)
                 results.update(out)
                 _merge_stats(stats, cstats)
             return results
@@ -369,7 +395,7 @@ class ShardedExecutor:
                     # never fans out)
                     with jax.default_device(dev):
                         for ci in assign[ri]:
-                            out, cst = rep._cluster_work(
+                            out, cst = cluster_fn(rep, ci)(
                                 queries, index, plus, min_sb, clusters[ci])
                             outs[ri].update(out)
                             cstats_all[ri].append(cst)

@@ -39,6 +39,7 @@ from .pathset import PathSet, concat, empty, singleton
 from .enumerate import (count_ending_at, expand_level, extract_rows,
                         prune_table, select_ending_at)
 from .join import cross_join, keyed_join, keyed_join_count, sort_by_last
+from .planner import CostRouter, Route, RouterConfig
 from .query import (BatchReport, Output, PathQuery, PathsStore, Planner,
                     QueryLike, QueryResult, midpoint_split)
 from .similarity import similarity_matrix
@@ -100,6 +101,8 @@ class EngineConfig:
     # span (costs dispatch overlap; measurement mode only)
     trace_annotations: bool = False  # wrap spans in jax.profiler
     # TraceAnnotation so they appear on profiler device timelines
+    router: Optional[RouterConfig] = None  # Planner.AUTO routing thresholds
+    # and output-kind weights (None = planner.RouterConfig defaults)
 
 
 @dataclasses.dataclass
@@ -169,6 +172,8 @@ class BatchPathEngine:
         if cache is None and self.cfg.cache_bytes > 0:
             cache = SharedPathCache(self.cfg.cache_bytes)
         self.cache = cache
+        # Planner.AUTO tier routing + per-cluster planner choice
+        self.router = CostRouter(self.cfg.router)
         # process-wide recorder (jit caches are process-global); None when
         # telemetry is off — every run()/apply_delta() report then carries
         # n_compiles / n_retraces / compiled_kernels for its window
@@ -432,7 +437,10 @@ class BatchPathEngine:
                                         backend=self._kb)
                     index.dist_s.block_until_ready()
                 stats["t_build_index"] = sidx.duration
-                if planner.batched:
+                if planner is Planner.AUTO:
+                    report = self._run_auto(qs, index, plus, stats,
+                                            clusters)
+                elif planner.batched:
                     report = self._run_batch(qs, index, plus, stats,
                                              clusters)
                 else:
@@ -461,6 +469,21 @@ class BatchPathEngine:
     # ------------------------------------------------------------------
     # BasicEnum (Alg 1): shared index, per-query bidirectional enumeration
     # ------------------------------------------------------------------
+    def _direct_query(self, q: PathQuery, qi: int, index: QueryIndex,
+                      plus: bool, stats: dict) -> QueryResult:
+        """One query through the Alg-1 direct plan: bidirectional
+        enumeration off the shared index, backward half lazy. Shared by
+        the basic planners, AUTO's GREEN tier and basic-routed clusters."""
+        a, b = self._split(qi, index, plus)
+        fs = self._dedicated_slack(index, qi, forward=True)
+        fl = self._run_node(False, q.s, a, fs, [], stop_vertex=q.t)
+
+        def bwd(qi=qi, q=q, b=b):
+            bs = self._dedicated_slack(index, qi, forward=False)
+            return self._run_node(True, q.t, b, bs, [], stop_vertex=q.s)
+
+        return self._wrap(q, self._payload(q, fl, a, bwd, b, stats))
+
     def _run_basic(self, queries, index: QueryIndex, plus: bool,
                    stats) -> BatchReport:
         with self.obs.span("enumerate.batch",
@@ -468,22 +491,37 @@ class BatchPathEngine:
             results = []
             for qi, q in enumerate(queries):
                 with self.obs.span("assemble.query", qi=qi) as sq:
-                    a, b = self._split(qi, index, plus)
-                    fs = self._dedicated_slack(index, qi, forward=True)
-                    fl = self._run_node(False, q.s, a, fs, [],
-                                        stop_vertex=q.t)
-
-                    def bwd(qi=qi, q=q, b=b):
-                        bs = self._dedicated_slack(index, qi, forward=False)
-                        return self._run_node(True, q.t, b, bs, [],
-                                              stop_vertex=q.s)
-
-                    r = self._wrap(q, self._payload(q, fl, a, bwd, b, stats))
+                    r = self._direct_query(q, qi, index, plus, stats)
                 r.time_s = sq.duration
                 results.append(r)
         stats["t_enumerate"] = senum.duration
         return BatchReport(queries=tuple(queries), results=tuple(results),
                            stats=stats)
+
+    def _cluster_basic(self, queries, index: QueryIndex, plus: bool,
+                       min_sb: int, cluster: list[int]):
+        """Direct per-query plan for one routed cluster — the executor's
+        ``planners=["basic", ...]`` arm (see ``CostRouter.cluster_planner``).
+        Same ``({qi: QueryResult}, cstats)`` contract as
+        :meth:`_cluster_work`, but no Ψ detection, no sharing, no cache:
+        a cluster with nothing to share skips that machinery's overhead.
+        """
+        del min_sb   # no shares to budget on the direct plan
+        cstats = {"n_psi_nodes": 0, "n_materialized": 0,
+                  "n_cache_hits": 0, "n_cache_misses": 0,
+                  "n_rows_assembled": 0, "n_shared": 0, "n_dedup": 0,
+                  "n_share_edges": 0, "t_detect": 0.0}
+        with self.obs.span("enumerate.cluster", size=len(cluster),
+                           direct=True) as se:
+            results: dict[int, QueryResult] = {}
+            for qi in cluster:
+                q = queries[qi]
+                with self.obs.span("assemble.query", qi=qi) as sq:
+                    results[qi] = self._direct_query(q, qi, index, plus,
+                                                     cstats)
+                results[qi].time_s = sq.duration
+        cstats["t_enumerate"] = se.duration
+        return results, cstats
 
     def _run_pathenum(self, queries, stats) -> BatchReport:
         """Per-query index construction + enumeration (the PathEnum baseline)."""
@@ -519,21 +557,48 @@ class BatchPathEngine:
     # ------------------------------------------------------------------
     def _run_batch(self, queries, index: QueryIndex, plus: bool, stats,
                    clusters: Optional[list[list[int]]] = None) -> BatchReport:
+        results = self._run_clustered(queries, index, plus, stats, clusters)
+        return BatchReport(queries=tuple(queries),
+                           results=tuple(results[qi]
+                                         for qi in range(len(queries))),
+                           stats=stats)
+
+    def _run_clustered(self, queries, index: QueryIndex, plus: bool, stats,
+                       clusters: Optional[list[list[int]]] = None, *,
+                       subset: Optional[list[int]] = None,
+                       ests: Optional[dict] = None,
+                       routes: Optional[dict] = None) -> dict:
+        """Cluster → (route) → execute; returns ``{qi: QueryResult}``.
+
+        The shared body of the batch planners and the AUTO YELLOW/RED
+        tier. ``subset`` restricts clustering to those query indices
+        (AUTO runs it on the non-GREEN remainder; similarity rows are
+        sliced, cluster members stay *global* indices). With ``ests``
+        (qi → :class:`~repro.core.planner.CostEstimate`) the router picks
+        each cluster's planner (basic vs. batch) and tier — RED clusters
+        keep LPT placement priority implicitly through their summed cost;
+        ``routes`` entries are upgraded in place for RED members.
+        """
+        qis = list(range(len(queries))) if subset is None else list(subset)
         with self.obs.span("cluster.queries",
                            precomputed=clusters is not None) as sc:
             if clusters is None:
                 mu = similarity_matrix(index, backend=self._kb)
+                if subset is None:
+                    stats["mu_mean"] = float(
+                        (mu.sum() - len(queries)) /
+                        max(len(queries) * (len(queries) - 1), 1))
+                else:
+                    mu = mu[np.ix_(qis, qis)]
                 min_clusters = 1
                 if self.cfg.balance_clusters and self.executor is not None:
                     min_clusters = self.executor.n_replicas
-                clusters = cluster_queries(mu, self.cfg.gamma,
-                                           min_clusters=min_clusters)
-                stats["mu_mean"] = float(
-                    (mu.sum() - len(queries)) /
-                    max(len(queries) * (len(queries) - 1), 1))
+                local = cluster_queries(mu, self.cfg.gamma,
+                                        min_clusters=min_clusters)
+                clusters = [[qis[i] for i in cl] for cl in local]
             else:
                 seen = [qi for cl in clusters for qi in cl]
-                if sorted(seen) != list(range(len(queries))):
+                if sorted(seen) != sorted(qis):
                     raise ValueError(
                         "clusters must partition the query indices")
             sc.set(n_clusters=len(clusters))
@@ -545,16 +610,119 @@ class BatchPathEngine:
                     "n_cache_hits", "n_cache_misses",
                     "t_detect", "t_enumerate",
                     "n_shared", "n_dedup", "n_share_edges"):
-            stats[key] = 0
+            stats.setdefault(key, 0)
+
+        planners = None
+        if ests is not None:
+            sharded = self.executor is not None and self.executor.sharded
+            planners = [self.router.cluster_planner(cl, ests,
+                                                    self.cache is not None)
+                        for cl in clusters]
+            stats["cluster_planners"] = list(planners)
+            croutes = [self.router.cluster_route(cl, ests, sharded)
+                       for cl in clusters]
+            stats["cluster_routes"] = [r.value for r in croutes]
+            if routes is not None:
+                for cl, r in zip(clusters, croutes):
+                    if r is Route.RED:
+                        for qi in cl:
+                            routes[qi] = Route.RED
         # plan -> place -> gather: the executor runs every cluster —
         # inline here on one device, fanned across per-device replicas on
         # a mesh (distributed.ShardedExecutor.run_clusters)
-        results = self.executor.run_clusters(queries, index, plus, min_sb,
-                                             clusters, stats)
-        return BatchReport(queries=tuple(queries),
-                           results=tuple(results[qi]
-                                         for qi in range(len(queries))),
-                           stats=stats)
+        return self.executor.run_clusters(queries, index, plus, min_sb,
+                                          clusters, stats, planners=planners)
+
+    # ------------------------------------------------------------------
+    # AUTO: cost-routed GREEN/YELLOW/RED tiers (core.planner)
+    # ------------------------------------------------------------------
+    def _run_auto(self, queries, index: QueryIndex, plus: bool, stats,
+                  clusters: Optional[list[list[int]]] = None) -> BatchReport:
+        """Route each query by its index-derived cost estimate: GREEN
+        queries take the direct sweep (no clustering/detection/cache);
+        the remainder runs through :meth:`_run_clustered`, which also
+        picks each cluster's planner and RED/YELLOW tier. Exactness is
+        planner-independent, so routing can only move wall time."""
+        with self.obs.span("route.estimate", n_queries=len(queries)) as sr:
+            dists = self._dists_host(index)
+            ests = self.router.estimate(index, queries, dists)
+            routes = {e.qi: e.route for e in ests}
+            green = [e.qi for e in ests if e.route is Route.GREEN]
+            rest = [e.qi for e in ests if e.route is not Route.GREEN]
+            sr.set(n_green=len(green))
+        stats["t_route"] = sr.duration
+
+        # AUTO answers may skip whole stages; pre-zero the batch counters
+        # so report consumers see one stable schema across routes
+        for key in ("n_psi_nodes", "n_materialized",
+                    "n_cache_hits", "n_cache_misses",
+                    "t_detect", "t_enumerate", "t_cluster",
+                    "n_shared", "n_dedup", "n_share_edges"):
+            stats[key] = 0
+        stats["n_clusters"] = 0
+
+        results: dict[int, QueryResult] = {}
+        if green:
+            results.update(self._run_green(queries, index, plus, green,
+                                           stats))
+        if rest:
+            if clusters is not None:
+                # the caller's grouping covered every query; keep only the
+                # non-GREEN members (GREEN ones were just answered)
+                keep = set(rest)
+                clusters = [[qi for qi in cl if qi in keep]
+                            for cl in clusters]
+                clusters = [cl for cl in clusters if cl]
+            results.update(self._run_clustered(
+                queries, index, plus, stats, clusters,
+                subset=rest, ests={e.qi: e for e in ests}, routes=routes))
+
+        reg = obsmetrics.registry()
+        for route in Route:
+            n = sum(1 for r in routes.values() if r is route)
+            stats[f"routed_{route.value}"] = n
+            if n:
+                reg.counter(f"routed_{route.value}").inc(n)
+        return BatchReport(
+            queries=tuple(queries),
+            results=tuple(results[qi] for qi in range(len(queries))),
+            stats=stats,
+            routes=tuple(routes[qi].value for qi in range(len(queries))))
+
+    def _run_green(self, queries, index: QueryIndex, plus: bool,
+                   green: list[int], stats) -> dict:
+        """The GREEN tier: answer routed queries straight off the shared
+        index. exists-only and index-unreachable queries are decided by
+        the MS-BFS distances alone (``dist_G(s,t) <= k`` iff a ≤k-hop
+        simple path exists — shortest walks are simple); the rest run the
+        direct per-query plan with no detection/clustering/cache."""
+        ds, _ = self._dists_host(index)
+        results: dict[int, QueryResult] = {}
+        with self.obs.span("route.green", n_queries=len(green)) as sg:
+            for qi in green:
+                q = queries[qi]
+                with self.obs.span("assemble.query", qi=qi,
+                                   route="green") as sq:
+                    if int(ds[q.t, index.src_col[qi]]) > q.k:
+                        r = self._empty_result(q)
+                    elif q.output is Output.EXISTS:
+                        r = QueryResult(q, _exists=True)
+                    else:
+                        r = self._direct_query(q, qi, index, plus, stats)
+                r.time_s = sq.duration
+                results[qi] = r
+        stats["t_green"] = sg.duration
+        return results
+
+    @staticmethod
+    def _empty_result(q: PathQuery) -> QueryResult:
+        """The (exact) empty answer, shaped like the enumerators': an
+        empty ``(0, k+1)`` path matrix / zero count / False."""
+        if q.output is Output.PATHS:
+            return QueryResult(q, _store=PathsStore(empty(1, q.k + 1)))
+        if q.output is Output.EXISTS:
+            return QueryResult(q, _exists=False)
+        return QueryResult(q, _count=0, _exists=False)
 
     def _cluster_work(self, queries, index: QueryIndex, plus: bool,
                       min_sb: int, cluster: list[int]):

@@ -77,6 +77,8 @@ class Planner(enum.Enum):
     BATCH = "batch"            # Alg 4: cluster -> detect -> shared enumeration
     BATCH_PLUS = "batch+"      # ... with cost-based fwd/bwd split
     PATHENUM = "pathenum"      # per-query index + enumeration (baseline)
+    AUTO = "auto"              # cost-routed: GREEN/YELLOW/RED per query +
+    #                            per-cluster basic/batch (core/planner.py)
 
     @classmethod
     def coerce(cls, value: Union["Planner", str]) -> "Planner":
@@ -281,11 +283,15 @@ class BatchReport:
     """Aggregate result of one engine run: per-query QueryResults + stats.
 
     Indexable by query position (``report[qi]``), iterable in input order.
+    ``routes`` is the per-query tier chosen under ``Planner.AUTO``
+    (``"green"`` | ``"yellow"`` | ``"red"``, input order); ``None`` for
+    forced planners, where no routing decision was made.
     """
 
     queries: tuple[PathQuery, ...]
     results: tuple[QueryResult, ...]
     stats: dict
+    routes: Optional[tuple[str, ...]] = None
 
     def __len__(self) -> int:
         return len(self.results)

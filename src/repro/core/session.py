@@ -93,7 +93,8 @@ class PathSession:
         self.planner = Planner.coerce(planner)
         self._server = None
         self._server_kw = dict(n_groups=n_groups, policy=policy,
-                               gamma=gamma, warm_bias_eps=warm_bias_eps)
+                               gamma=gamma, warm_bias_eps=warm_bias_eps,
+                               planner=self.planner)
 
     # -- one-shot batch ------------------------------------------------
     def run(self, queries: Sequence[QueryLike],

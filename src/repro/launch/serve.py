@@ -25,6 +25,7 @@ import numpy as np
 
 from ..core import BatchPathEngine, EngineConfig, build_index
 from ..core import generators
+from ..core.planner import admission_fast_path
 from ..core.query import PathQuery, Planner, QueryLike, QueryResult
 from ..core.clustering import cluster_queries
 from ..core.similarity import similarity_matrix
@@ -41,12 +42,18 @@ class AdmissionPolicy:
 
     max_batch: int = 32         # admit as soon as this many queries wait
     max_delay_s: float = 0.02   # ... or the oldest has waited this long
-    min_batch: int = 1          # never admit fewer (except on drain)
+    min_batch: int = 1          # never admit fewer, unless the deadline
+    # has passed (the deadline overrides min_batch: a lone query older
+    # than max_delay_s must not starve until drain())
 
     def due(self, n_waiting: int, oldest_wait_s: float) -> bool:
+        if n_waiting <= 0:
+            return False
+        if oldest_wait_s >= self.max_delay_s:
+            return True
         if n_waiting < self.min_batch:
             return False
-        return n_waiting >= self.max_batch or oldest_wait_s >= self.max_delay_s
+        return n_waiting >= self.max_batch
 
 
 def warm_cluster_bias(engine: BatchPathEngine, queries: Sequence[QueryLike],
@@ -63,7 +70,10 @@ def warm_cluster_bias(engine: BatchPathEngine, queries: Sequence[QueryLike],
     cache = engine.cache
     if cache is None or len(queries) < 2:
         return None
-    queries = [PathQuery.coerce(q) for q in queries]
+    if any(not isinstance(q, PathQuery) for q in queries):
+        # coerce only mixed/legacy inputs; the admission hot path hands
+        # us already-validated PathQuery objects every micro-batch
+        queries = [PathQuery.coerce(q) for q in queries]
     warm_f = [cache.has_root("f", q.s) for q in queries]
     warm_b = [cache.has_root("b", q.t) for q in queries]
     Q = len(queries)
@@ -103,12 +113,18 @@ class StreamingServer:
     def __init__(self, engine: BatchPathEngine, n_groups: int = 2,
                  gamma: Optional[float] = None,
                  policy: Optional[AdmissionPolicy] = None,
-                 warm_bias_eps: float = 0.08):
+                 warm_bias_eps: float = 0.08,
+                 planner: Planner | str = Planner.BATCH):
         self.engine = engine
         self.n_groups = n_groups
         self.gamma = engine.cfg.gamma if gamma is None else gamma
         self.policy = policy or AdmissionPolicy()
         self.warm_bias_eps = warm_bias_eps
+        # planner for admitted micro-batches; AUTO additionally turns on
+        # the submit-time fast path (certainly-GREEN queries answered
+        # immediately instead of waiting out micro-batch coalescing)
+        self.planner = Planner.coerce(planner)
+        self.n_fast_path = 0
         self.sched = WorkStealingScheduler(
             n_groups, cost_fn=lambda qs: float(len(qs)) ** 1.5)
         self.results: dict[int, QueryResult] = {}
@@ -127,11 +143,29 @@ class StreamingServer:
         Raises ValueError immediately for malformed queries (bad arity,
         s == t, k < 1, vertices outside the graph) — admission never sees
         them, so they cannot poison a micro-batch.
+
+        Under ``planner=AUTO``, certainly-GREEN queries (exists-only; see
+        ``core.planner.admission_fast_path``) bypass coalescing entirely:
+        they are answered here, against the graph as of the last flushed
+        delta (the same boundary semantics an admitted batch would see —
+        queued-but-unflushed deltas apply at the *next* batch boundary,
+        which this fast path never waits for).
         """
         q = PathQuery.coerce(query).check_bounds(self.engine.g.n)
         qid = self._next_qid
         self._next_qid += 1
         self._query_of[qid] = q
+        if self.planner is Planner.AUTO and admission_fast_path(q):
+            reg = obsmetrics.registry()
+            reg.counter("serve_fast_path_total").inc()
+            with self.engine.obs.span("serve.fast_path"):
+                r = self.engine.run([q], planner=Planner.AUTO)
+            self.results[qid] = r[0].offload()
+            self.n_fast_path += 1
+            reg.histogram("serve_admission_wait_s").record(0.0)
+            reg.histogram("serve_query_e2e_s").record(
+                r.stats.get("t_wall_s", 0.0))
+            return qid
         self._waiting.append((qid, q,
                               time.monotonic() if now is None else now))
         return qid
@@ -257,7 +291,8 @@ class StreamingServer:
             # 0) or paid a trace (e.g. after a shape-bucket crossing)
             agg = {"n_psi_nodes": 0, "n_materialized": 0,
                    "n_cache_hits": 0, "n_cache_misses": 0,
-                   "n_compiles": 0, "n_retraces": 0}
+                   "n_compiles": 0, "n_retraces": 0,
+                   "routed_green": 0, "routed_yellow": 0, "routed_red": 0}
             per_device = None
             executor = self.engine.executor
             if executor is not None and executor.sharded:
@@ -265,7 +300,7 @@ class StreamingServer:
                 # cost-balanced placement replaces the host work-stealing
                 # loop — one run carries every (cache-aware) cluster,
                 # fanned across the per-device replicas and gathered back
-                r = self.engine.run(queries, planner=Planner.BATCH,
+                r = self.engine.run(queries, planner=self.planner,
                                     clusters=clusters)
                 for i, qid in enumerate(qids):
                     self.results[qid] = r[i].offload()
@@ -287,7 +322,7 @@ class StreamingServer:
                         # the item IS one cluster — pass it through so the
                         # engine keeps our (cache-aware) grouping instead
                         # of re-clustering
-                        r = self.engine.run(sub, planner=Planner.BATCH,
+                        r = self.engine.run(sub, planner=self.planner,
                                             clusters=[list(range(len(sub)))])
                         for i, qid in enumerate(item.queries):
                             # results may sit untaken indefinitely —

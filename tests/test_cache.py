@@ -225,7 +225,10 @@ class TestStreaming:
         assert not pol.due(3, 0.1)
         assert pol.due(3, 0.6)          # deadline hit
         assert pol.due(32, 0.0)         # size hit
-        assert not AdmissionPolicy(min_batch=2).due(1, 99.0)
+        # min_batch holds back *young* sub-minimum batches only — the
+        # deadline overrides it, so a lone old query never starves
+        assert not AdmissionPolicy(min_batch=2).due(1, 0.0)
+        assert AdmissionPolicy(min_batch=2).due(1, 99.0)
 
     def test_warm_bias_biases_clustering(self):
         g = generators.community(100, n_comm=3, avg_deg=4.0, seed=3)

@@ -226,6 +226,15 @@ def test_plan_clusters_balance_and_uneven_shapes():
     assign, _ = plan_clusters([10.0, 9.0, 1.0], 2)
     heavy = [a for a in assign if 0 in a][0]
     assert 1 not in heavy
+    # all-zero costs: ties must spread round-robin, not serialize on
+    # replica 0 (load ties break on assignment count)
+    assign, loads = plan_clusters([0.0] * 6, 3)
+    assert [len(a) for a in assign] == [2, 2, 2]
+    assert sorted(ci for a in assign for ci in a) == list(range(6))
+    assert loads == [0.0] * 3
+    # zero-cost remainder spreads too (4 ties over 3 replicas: 2/1/1)
+    assign, _ = plan_clusters([0.0] * 4, 3)
+    assert sorted(len(a) for a in assign) == [1, 1, 2]
 
 
 def test_edge_bucket_alignment():

@@ -15,7 +15,7 @@ from repro.core.oracle import enumerate_paths_bruteforce, path_set
 
 pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
 
-MODES = ["basic", "basic+", "batch", "batch+", "pathenum"]
+MODES = ["basic", "basic+", "batch", "batch+", "pathenum", "auto"]
 
 
 def _run_and_compare(g, qs, mode, cfg=None):

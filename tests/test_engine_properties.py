@@ -35,6 +35,31 @@ def test_property_batch_equals_oracle(n, m, seed, k):
     _run_and_compare(g, qs, "batch")
 
 
+@given(st.integers(10, 60), st.integers(10, 160), st.integers(0, 30),
+       st.integers(2, 5))
+@settings(max_examples=12, deadline=None)
+def test_property_auto_equals_forced_planners(n, m, seed, k):
+    """Property: for ANY random digraph and query set, cost-routed AUTO
+    returns exactly the same path sets as the forced planners (routing
+    may only move wall time, never results)."""
+    r = np.random.default_rng(seed)
+    g = Graph.from_edges(n, r.integers(0, n, m), r.integers(0, n, m))
+    pairs = set()
+    while len(pairs) < 4:
+        s, t = int(r.integers(0, n)), int(r.integers(0, n))
+        if s != t:
+            pairs.add((s, t))
+    qs = [(s, t, k) for s, t in pairs]
+    auto = _run_and_compare(g, qs, "auto")
+    forced = _run_and_compare(g, qs, "batch")
+    for qi in range(len(qs)):
+        got_a = {tuple(int(x) for x in row if x >= 0)
+                 for row in auto.paths[qi]}
+        got_f = {tuple(int(x) for x in row if x >= 0)
+                 for row in forced.paths[qi]}
+        assert got_a == got_f, f"auto vs batch diverge on q{qi}"
+
+
 @given(st.integers(0, 20))
 @settings(max_examples=8, deadline=None)
 def test_property_results_are_simple_and_bounded(seed):

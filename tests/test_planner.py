@@ -1,0 +1,366 @@
+"""Cost-routed adaptive planning (core.planner + Planner.AUTO).
+
+Covers: the cost model's routing decisions, AUTO-vs-forced result parity
+(routing may only move wall time), GREEN direct-sweep oracle exactness
+across outputs/limits/delta churn, the serving-path bugfixes (admission
+deadline starvation, warm-bias re-coercion, host-dist re-transfers) and
+the streaming fast path.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (BatchPathEngine, EngineConfig, GraphDelta,
+                        PathQuery, Planner, RouterConfig, build_index,
+                        generators)
+from repro.core.distributed import cluster_costs
+from repro.core.graph import DeviceGraph
+from repro.core.oracle import enumerate_paths_bruteforce, path_set
+from repro.core.planner import CostRouter, Route, admission_fast_path
+from repro.core.query import Output
+from repro.launch.serve import (AdmissionPolicy, StreamingServer,
+                                warm_cluster_bias)
+from repro.obs import metrics as obsmetrics
+
+
+GREEN_ALL = RouterConfig(green_max_cost=float("inf"))
+YELLOW_ALL = RouterConfig(green_max_cost=-1.0)
+
+
+def _graph():
+    return generators.community(300, n_comm=3, avg_deg=5.0, seed=0)
+
+
+def _mixed_queries(g, n_paths=8):
+    qs = [PathQuery.coerce(q) for q in
+          generators.similar_queries(g, n_paths, 0.6, (3, 4), seed=1)]
+    qs.append(PathQuery(qs[0].s, qs[0].t, 3, output="exists"))
+    qs.append(PathQuery(qs[1].s, qs[1].t, 3, output="count", limit=2))
+    qs.append(PathQuery(qs[2].s, qs[2].t, 4, output="count"))
+    return qs
+
+
+def _assert_same_results(ra, rb, queries):
+    for qi, q in enumerate(queries):
+        if q.output is Output.PATHS and q.limit is None:
+            assert set(map(tuple, ra[qi].paths)) \
+                == set(map(tuple, rb[qi].paths)), qi
+        elif q.output is Output.COUNT:
+            assert ra[qi].count == rb[qi].count, qi
+        assert ra[qi].exists == rb[qi].exists, qi
+
+
+# ----------------------------------------------------------------------
+# cost model / routing decisions
+# ----------------------------------------------------------------------
+
+def test_estimates_weight_outputs_and_limits():
+    g = _graph()
+    s, t = 0, 1
+    d = None
+    # find a reachable pair with some hop slack
+    from repro.core.oracle import bfs_dist_from
+    d = bfs_dist_from(g, 0, 6)
+    ts = np.flatnonzero((d >= 1) & (d <= 3))
+    t = int(ts[0])
+    qs = [PathQuery(s, t, 4),                                   # paths
+          PathQuery(s, t, 4, output="count"),                   # count
+          PathQuery(s, t, 4, output="exists"),                  # exists
+          PathQuery(s, t, 4, limit=1)]                          # tiny limit
+    dg = DeviceGraph.build(g)
+    index = build_index(dg, [q.key for q in qs])
+    dists = (np.asarray(index.dist_s), np.asarray(index.dist_t))
+    ests = CostRouter().estimate(index, qs, dists)
+    paths_e, count_e, exists_e, lim_e = ests
+    assert all(e.reachable for e in ests)
+    assert paths_e.raw_cost == count_e.raw_cost == exists_e.raw_cost > 0
+    # exists is free (the index already holds the answer)
+    assert exists_e.cost == 0.0 and exists_e.route is Route.GREEN
+    # count weighs below full paths; a limit caps below both
+    assert count_e.cost == pytest.approx(paths_e.cost * 0.5)
+    assert lim_e.cost <= paths_e.cost
+
+
+def test_unreachable_routes_green_regardless_of_output():
+    g = _graph()
+    # s == t is rejected at validation; build an unreachable pair by
+    # giving the query less hop budget than the true distance
+    from repro.core.oracle import bfs_dist_from
+    d = bfs_dist_from(g, 0, 6)
+    far = np.flatnonzero(d >= 3)
+    assert far.size, "graph too dense for the fixture"
+    t = int(far[0])
+    qs = [PathQuery(0, t, 2), PathQuery(0, t, 2, output="count")]
+    dg = DeviceGraph.build(g)
+    index = build_index(dg, [q.key for q in qs])
+    dists = (np.asarray(index.dist_s), np.asarray(index.dist_t))
+    for e in CostRouter().estimate(index, qs, dists):
+        assert not e.reachable
+        assert e.cost == 0.0 and e.route is Route.GREEN
+
+
+def test_cost_monotone_in_hop_budget():
+    g = _graph()
+    from repro.core.oracle import bfs_dist_from
+    d = bfs_dist_from(g, 0, 6)
+    t = int(np.flatnonzero((d >= 1) & (d <= 2))[0])
+    qs = [PathQuery(0, t, 2), PathQuery(0, t, 5)]
+    dg = DeviceGraph.build(g)
+    index = build_index(dg, [q.key for q in qs])
+    dists = (np.asarray(index.dist_s), np.asarray(index.dist_t))
+    small, big = CostRouter().estimate(index, qs, dists)
+    assert big.raw_cost >= small.raw_cost > 0
+
+
+def test_cluster_planner_choice():
+    router = CostRouter()
+    assert router.cluster_planner([0, 1], {}, has_cache=False) == "batch"
+    assert router.cluster_planner([0], {}, has_cache=True) == "batch"
+    assert router.cluster_planner([0], {}, has_cache=False) == "basic"
+
+
+# ----------------------------------------------------------------------
+# AUTO parity + GREEN exactness
+# ----------------------------------------------------------------------
+
+def test_auto_matches_forced_planners_mixed_outputs():
+    g = _graph()
+    qs = _mixed_queries(g)
+    # a mid threshold so the batch genuinely mixes GREEN and YELLOW
+    eng = BatchPathEngine(g, EngineConfig(
+        min_cap=128, router=RouterConfig(green_max_cost=150.0)))
+    ra = eng.run(qs, planner=Planner.AUTO)
+    rb = eng.run(qs, planner=Planner.BATCH)
+    rc = eng.run(qs, planner="basic")
+    _assert_same_results(ra, rb, qs)
+    _assert_same_results(ra, rc, qs)
+    # routing metadata: one route per query, counters sum to Q
+    assert ra.routes is not None and len(ra.routes) == len(qs)
+    assert set(ra.routes) <= {"green", "yellow", "red"}
+    assert (ra.stats["routed_green"] + ra.stats["routed_yellow"]
+            + ra.stats["routed_red"]) == len(qs)
+    assert ra.stats["routed_green"] > 0
+    # forced planners make no routing decision
+    assert rb.routes is None and rc.routes is None
+
+
+def test_all_yellow_auto_equals_batch():
+    g = _graph()
+    qs = _mixed_queries(g, n_paths=6)
+    eng = BatchPathEngine(g, EngineConfig(min_cap=128, router=YELLOW_ALL))
+    ra = eng.run(qs, planner="auto")
+    rb = eng.run(qs, planner="batch")
+    assert all(r in ("yellow", "red") for r in ra.routes)
+    assert ra.stats["routed_green"] == 0
+    _assert_same_results(ra, rb, qs)
+
+
+def test_green_direct_sweep_matches_oracle():
+    g = _graph()
+    qs = _mixed_queries(g)
+    qs.append(PathQuery(qs[0].s, qs[0].t, 4, limit=3))   # limited paths
+    eng = BatchPathEngine(g, EngineConfig(min_cap=128, router=GREEN_ALL))
+    r = eng.run(qs, planner="auto")
+    assert all(route == "green" for route in r.routes)
+    for qi, q in enumerate(qs):
+        truth = path_set(enumerate_paths_bruteforce(g, q.s, q.t, q.k))
+        if q.output is Output.PATHS:
+            rows = [tuple(int(x) for x in row if x >= 0)
+                    for row in r[qi].paths]
+            assert len(rows) == len(set(rows)), f"q{qi}: duplicate paths"
+            if q.limit is None:
+                assert set(rows) == truth, qi
+            else:
+                assert set(rows) <= truth, qi
+                assert len(rows) == min(q.limit, len(truth)), qi
+        elif q.output is Output.COUNT:
+            want = len(truth) if q.limit is None else min(q.limit, len(truth))
+            assert r[qi].count == want, qi
+        assert r[qi].exists == (len(truth) > 0), qi
+
+
+def test_green_unreachable_shapes_match_forced():
+    g = _graph()
+    from repro.core.oracle import bfs_dist_from
+    d = bfs_dist_from(g, 0, 6)
+    t = int(np.flatnonzero(d >= 3)[0])
+    qs = [PathQuery(0, t, 2), PathQuery(0, t, 2, output="count"),
+          PathQuery(0, t, 2, output="exists")]
+    eng = BatchPathEngine(g, EngineConfig(min_cap=128, router=GREEN_ALL))
+    ra = eng.run(qs, planner="auto")
+    rb = eng.run(qs, planner="batch")
+    assert ra.routes == ("green",) * 3
+    assert ra[0].paths.shape == rb[0].paths.shape == (0, 3)
+    assert ra[1].count == 0 and not ra[2].exists
+    _assert_same_results(ra, rb, qs)
+
+
+def test_green_exact_under_delta_churn():
+    g = _graph()
+    eng = BatchPathEngine(g, EngineConfig(min_cap=128, router=GREEN_ALL))
+    rng = np.random.default_rng(7)
+    qs = _mixed_queries(g, n_paths=4)
+    for _ in range(3):
+        a_s = rng.integers(0, g.n, 5)
+        a_d = rng.integers(0, g.n, 5)
+        d_s = rng.integers(0, g.n, 5)
+        d_d = rng.integers(0, g.n, 5)
+        eng.apply_delta(GraphDelta(a_s, a_d, d_s, d_d))
+        r = eng.run(qs, planner="auto")
+        for qi, q in enumerate(qs):
+            truth = path_set(
+                enumerate_paths_bruteforce(eng.g, q.s, q.t, q.k))
+            if q.output is Output.PATHS and q.limit is None:
+                assert path_set(r[qi].paths) == truth, qi
+            elif q.output is Output.COUNT:
+                want = len(truth) if q.limit is None \
+                    else min(q.limit, len(truth))
+                assert r[qi].count == want, qi
+            assert r[qi].exists == (len(truth) > 0), qi
+
+
+def test_precomputed_clusters_with_auto():
+    """AUTO must honor a caller's clustering for the non-GREEN remainder
+    (GREEN members are answered first and filtered out of the groups)."""
+    g = _graph()
+    qs = _mixed_queries(g, n_paths=6)
+    clusters = [list(range(0, 4)), list(range(4, len(qs)))]
+    eng = BatchPathEngine(g, EngineConfig(
+        min_cap=128, router=RouterConfig(green_max_cost=150.0)))
+    ra = eng.run(qs, planner="auto", clusters=clusters)
+    rb = eng.run(qs, planner="batch", clusters=clusters)
+    _assert_same_results(ra, rb, qs)
+
+
+# ----------------------------------------------------------------------
+# satellite bugfixes
+# ----------------------------------------------------------------------
+
+def test_admission_deadline_overrides_min_batch():
+    """A lone query older than max_delay_s must be admitted by pump(),
+    not starve until drain() (the deadline overrides min_batch)."""
+    pol = AdmissionPolicy(max_batch=32, max_delay_s=0.05, min_batch=4)
+    # unit: below min_batch but past deadline -> due
+    assert pol.due(1, 0.06)
+    assert not pol.due(1, 0.01)      # below min_batch, within deadline
+    assert not pol.due(0, 99.0)      # nothing waiting is never due
+    assert pol.due(32, 0.0)          # max_batch fires regardless
+    assert not pol.due(4, 0.01)      # min_batch met but neither trigger
+
+    g = _graph()
+    eng = BatchPathEngine(g, EngineConfig(min_cap=128))
+    srv = StreamingServer(eng, policy=pol)
+    qs = _mixed_queries(g, n_paths=4)
+    qid = srv.submit(qs[0], now=0.0)
+    assert not srv.pump(now=0.01)            # neither trigger yet
+    assert srv.pump(now=0.06)                # deadline override fires
+    assert qid in srv.results
+    assert srv.batch_log[-1]["n_queries"] == 1
+
+
+def test_warm_cluster_bias_skips_coerced_inputs(monkeypatch):
+    g = _graph()
+    eng = BatchPathEngine(g, EngineConfig(min_cap=128, cache_bytes=1 << 20))
+    qs = [PathQuery.coerce(q) for q in
+          generators.similar_queries(g, 4, 0.6, (3, 4), seed=1)]
+    calls = {"n": 0}
+    orig = PathQuery.coerce.__func__
+
+    def counting(cls, q):
+        calls["n"] += 1
+        return orig(cls, q)
+
+    monkeypatch.setattr(PathQuery, "coerce", classmethod(counting))
+    warm_cluster_bias(eng, qs)               # already PathQuery: no coercion
+    assert calls["n"] == 0
+    warm_cluster_bias(eng, [q.key for q in qs])   # legacy tuples: coerced
+    assert calls["n"] == len(qs)
+
+
+def test_cluster_costs_transfer_counter():
+    """The dists=None fallback is the only site that re-transfers the
+    distance matrices; hot paths threading the engine memo stay at zero."""
+    g = _graph()
+    qs = _mixed_queries(g, n_paths=4)
+    eng = BatchPathEngine(g, EngineConfig(min_cap=128))
+    reg = obsmetrics.registry()
+    ctr = reg.counter("host_dist_transfers_total", site="cluster_costs")
+
+    dg = DeviceGraph.build(g)
+    index = build_index(dg, [q.key for q in qs])
+    before = ctr.value
+    cluster_costs(index, [[0], [1]])                   # fallback: transfers
+    assert ctr.value == before + 1
+    dists = (np.asarray(index.dist_s), np.asarray(index.dist_t))
+    cluster_costs(index, [[0], [1]], dists=dists)      # memo: no transfer
+    assert ctr.value == before + 1
+    # a full AUTO run threads the engine memo everywhere
+    before = ctr.value
+    eng.run(qs, planner="auto")
+    assert ctr.value == before
+
+
+# ----------------------------------------------------------------------
+# streaming fast path
+# ----------------------------------------------------------------------
+
+def test_streaming_fast_path_answers_exists_at_submit():
+    g = _graph()
+    eng = BatchPathEngine(g, EngineConfig(min_cap=128))
+    srv = StreamingServer(eng, planner="auto",
+                          policy=AdmissionPolicy(min_batch=8, max_batch=32,
+                                                 max_delay_s=10.0))
+    q = _mixed_queries(g, n_paths=1)[0]
+    truth = path_set(enumerate_paths_bruteforce(g, q.s, q.t, q.k))
+    qid = srv.submit(PathQuery(q.s, q.t, q.k, output="exists"))
+    # answered at submit: no pump, no waiting entry
+    assert qid in srv.results and srv.n_fast_path == 1
+    assert not srv._waiting
+    assert srv.results[qid].exists == (len(truth) > 0)
+    assert admission_fast_path(PathQuery(q.s, q.t, q.k, output="exists"))
+    assert not admission_fast_path(PathQuery(q.s, q.t, q.k))
+
+
+def test_streaming_fast_path_off_for_forced_planners():
+    g = _graph()
+    eng = BatchPathEngine(g, EngineConfig(min_cap=128))
+    srv = StreamingServer(eng)       # default planner=BATCH
+    q = _mixed_queries(g, n_paths=1)[0]
+    qid = srv.submit(PathQuery(q.s, q.t, q.k, output="exists"))
+    assert qid not in srv.results and srv.n_fast_path == 0
+    srv.drain()
+    assert qid in srv.results
+    assert srv.batch_log[-1]["routed_green"] == 0     # BATCH routes nothing
+
+
+def test_streaming_auto_batches_carry_routes():
+    g = _graph()
+    eng = BatchPathEngine(g, EngineConfig(min_cap=128))
+    srv = StreamingServer(eng, planner="auto")
+    for q in _mixed_queries(g, n_paths=4):
+        srv.submit(q)
+    srv.drain()
+    routed = sum(srv.batch_log[-1][f"routed_{r}"]
+                 for r in ("green", "yellow", "red"))
+    assert routed == srv.batch_log[-1]["n_queries"]
+
+
+def test_deadline_bound_wait_under_auto():
+    """With the starvation fix, worst-case admission wait is bounded by
+    max_delay_s + one pump interval even for a lone sub-min_batch query."""
+    g = _graph()
+    eng = BatchPathEngine(g, EngineConfig(min_cap=128))
+    srv = StreamingServer(eng, planner="auto",
+                          policy=AdmissionPolicy(min_batch=8, max_batch=32,
+                                                 max_delay_s=0.05))
+    q = _mixed_queries(g, n_paths=1)[0]
+    srv.submit(q)
+    pump_interval = 0.02
+    deadline = time.monotonic() + 5.0
+    while not srv.batch_log and time.monotonic() < deadline:
+        srv.pump()
+        time.sleep(pump_interval)
+    assert srv.batch_log, "lone query starved past the deadline"
+    assert srv.batch_log[-1]["admission_wait_max_s"] \
+        <= 0.05 + pump_interval + 0.25   # generous scheduling slack
