@@ -241,6 +241,79 @@ def check_routing(current: dict, baseline: dict | None,
             f"(baseline {base * 1e3:.1f}ms + {max_regression:.0%})")
 
 
+def check_serving(current: dict, baseline: dict | None,
+                  max_regression: float) -> None:
+    """Gate the open-loop SLO serving contract (BENCH_serving.json from
+    exp11): >= 3 offered-load levels with zero lost queries and zero warm
+    retraces, the overload level must actually shed while still making
+    goodput, the mid-stream failover must recover with nothing lost or
+    duplicated and the cross-batch cache intact, and each level's
+    quantum-normalized p99 (``p99_x`` — machine-independent under the
+    deterministic service model) must not regress vs the committed smoke
+    baseline."""
+    levels = current.get("levels", [])
+    if len(levels) < 3:
+        _fail(f"only {len(levels)} offered-load level(s) (need >= 3)")
+    else:
+        names = ", ".join("{} {}x".format(lv.get("kind"),
+                                          lv.get("offered_mult"))
+                          for lv in levels)
+        _ok(f"{len(levels)} offered-load levels ({names})")
+    lost = current.get("n_lost_total", -1)
+    if lost != 0:
+        _fail(f"open loop lost {lost} queries (every submitted qid must "
+              f"resolve to exactly one OK or SHED result)")
+    else:
+        _ok("zero lost queries across all levels")
+    if current.get("warm_retraces", -1) != 0:
+        _fail(f"open-loop replay retraced warm shapes: "
+              f"{current.get('warm_retraces')}")
+    else:
+        _ok("measured replays warm retraces: 0")
+    if levels:
+        top = max(levels, key=lambda lv: lv.get("offered_mult", 0.0))
+        if top.get("n_shed", 0) <= 0:
+            _fail(f"overload level ({top.get('offered_mult')}x) shed "
+                  f"nothing — the shed path went unexercised")
+        elif top.get("goodput_qps", 0.0) <= 0.0:
+            _fail("overload level made zero goodput")
+        else:
+            _ok(f"overload level shed {top['n_shed']} "
+                f"({top.get('shed_reasons')}) at goodput "
+                f"{top['goodput_qps']:.0f} qps")
+    fo = current.get("failover", {})
+    if fo.get("failovers", 0) < 1 or fo.get("requeued", 0) < 1:
+        _fail(f"mid-stream failover not exercised: {fo}")
+    elif fo.get("n_lost", -1) != 0 or fo.get("n_dup", -1) != 0:
+        _fail(f"failover lost {fo.get('n_lost')} / duplicated "
+              f"{fo.get('n_dup')} results")
+    elif not (fo.get("cache_kept") and fo.get("oracle_ok")
+              and fo.get("revived_ok")):
+        _fail(f"failover recovery incomplete: cache_kept="
+              f"{fo.get('cache_kept')} oracle_ok={fo.get('oracle_ok')} "
+              f"revived_ok={fo.get('revived_ok')}")
+    else:
+        _ok(f"failover absorbed: {fo['requeued']} cluster(s) requeued, "
+            f"0 lost, 0 dup, cache kept "
+            f"({fo.get('cache_entries_after')} entries)")
+    if baseline is None or max_regression <= 0:
+        print("  (serving latency gate skipped)")
+        return
+    for lv, blv in zip(levels, baseline.get("levels", [])):
+        cur, base = lv.get("p99_x"), blv.get("p99_x")
+        tag = f"{lv.get('kind')} {lv.get('offered_mult')}x"
+        if cur is None or base is None:
+            _fail(f"p99_x missing for level {tag}")
+            continue
+        limit = base * (1.0 + max_regression)
+        if cur > limit:
+            _fail(f"{tag}: normalized p99 regressed: {cur:.2f} quanta vs "
+                  f"baseline {base:.2f} (limit {limit:.2f})")
+        else:
+            _ok(f"{tag}: p99 {cur:.2f} quanta <= {limit:.2f} "
+                f"(baseline {base:.2f} + {max_regression:.0%})")
+
+
 def check_sharded(current: dict, min_speedup: float) -> None:
     if not current.get("equal", False):
         _fail("sharded results are NOT equal to single-device")
@@ -306,12 +379,19 @@ def main() -> None:
     ap.add_argument("--min-routing-speedup", type=float, default=1.0,
                     help="required AUTO speedup vs the best single global "
                          "planner (same-run, machine-relative)")
+    ap.add_argument("--serving", type=Path, default=None,
+                    help="this run's results/BENCH_serving.json (open-loop "
+                         "SLO serving gate: lost/retraces/shed/failover)")
+    ap.add_argument("--serving-baseline", type=Path, default=None,
+                    help="committed BENCH_serving baseline json (optional; "
+                         "adds the per-level normalized-p99 tripwire)")
     args = ap.parse_args()
     if (args.current is None and args.sharded is None
             and args.kernels is None and args.obs is None
-            and args.routing is None and not args.static):
+            and args.routing is None and args.serving is None
+            and not args.static):
         ap.error("nothing to check: pass --current, --sharded, --kernels, "
-                 "--obs, --routing and/or --static")
+                 "--obs, --routing, --serving and/or --static")
 
     if args.current is not None:
         if args.baseline is None:
@@ -342,6 +422,14 @@ def main() -> None:
                 if args.routing_baseline else None)
         check_routing(json.loads(args.routing.read_text()), base,
                       args.min_routing_speedup, args.max_regression)
+    if args.serving is not None:
+        print(f"serving: {args.serving}"
+              + (f" vs baseline {args.serving_baseline}"
+                 if args.serving_baseline else ""))
+        base = (json.loads(args.serving_baseline.read_text())
+                if args.serving_baseline else None)
+        check_serving(json.loads(args.serving.read_text()), base,
+                      args.max_regression)
     if args.static:
         print("static: jaxpr audit vs committed dispatch budgets")
         check_static(args.static_budgets)

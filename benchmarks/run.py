@@ -16,7 +16,8 @@ from pathlib import Path
 from . import (exp1_similarity, exp2_batch_size, exp3_decomposition,
                exp4_gamma, exp5_scalability, exp6_ksp, exp7_path_counts,
                exp8_cross_batch, exp9_query_variants, exp10_dynamic,
-               exp12_mixed_routing, kernels_bench, obs_bench)
+               exp11_open_loop, exp12_mixed_routing, kernels_bench,
+               obs_bench)
 from .common import RESULTS
 
 ALL = {
@@ -31,6 +32,7 @@ ALL = {
     "exp8": exp8_cross_batch.main,
     "exp9": exp9_query_variants.main,
     "exp10": exp10_dynamic.main,
+    "exp11": exp11_open_loop.main,
     "exp12": exp12_mixed_routing.main,
     "kernels": kernels_bench.main,
     "obs": obs_bench.main,

@@ -1,0 +1,137 @@
+#!/usr/bin/env python
+"""Executable-documentation checker: run the fenced python in the docs.
+
+Every fenced code block in ``README.md`` and ``docs/*.md`` whose info
+string starts with ``python`` is checked, so API drift (a renamed method,
+a removed kwarg, a stale import) fails CI instead of rotting in prose:
+
+* ```` ```python ```` — **executed** in a fresh namespace pre-seeded with
+  the prelude below, inside a temporary working directory (snippets may
+  write files like ``trace.json`` freely).
+* ```` ```python norun ```` — **compiled only** (syntax check). For
+  fragments that illustrate syntax rather than a runnable call sequence
+  (GitHub highlights by the first word, so rendering is unchanged).
+
+The prelude stands in for "your graph / your queries" that docs assume
+as given: a small community graph ``graph``/``g``, a second graph
+``new_graph``, validated ``queries``, endpoint names ``s t k`` /
+``s2 t2 k2`` and edge names ``u v x y``, a constructed ``engine``, plus
+the public ``repro.core`` names (``PathQuery``, ``PathSession``,
+``EngineConfig``, ``BatchPathEngine``, ``GraphDelta``, ``Planner``,
+``generators``). Snippets should still show their own imports — the
+prelude exists so a fragment that *uses* an engine needn't rebuild one.
+
+Run locally::
+
+    JAX_PLATFORMS=cpu python docs/check_snippets.py          # all files
+    python docs/check_snippets.py README.md docs/api.md      # a subset
+
+CI runs this in the ``lint`` job (see ``.github/workflows/ci.yml``);
+``docs/benchmarks.md`` documents the convention.
+"""
+from __future__ import annotations
+
+import contextlib
+import io
+import os
+import re
+import sys
+import tempfile
+import traceback
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+FENCE = re.compile(r"^```(\S*)[ \t]*(.*)$")
+
+
+def extract_blocks(path: Path):
+    """Yield (lineno, info_words, source) for each fenced code block."""
+    lines = path.read_text().splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE.match(lines[i])
+        if m and m.group(1):
+            info = [m.group(1)] + m.group(2).split()
+            start = i + 1
+            j = start
+            while j < len(lines) and not lines[j].startswith("```"):
+                j += 1
+            yield start + 1, info, "\n".join(lines[start:j])
+            i = j + 1
+        else:
+            i += 1
+
+
+def build_prelude() -> dict:
+    from repro.core import (BatchPathEngine, EngineConfig, GraphDelta,
+                            PathQuery, PathSession, Planner, generators)
+
+    g = generators.community(150, n_comm=2, avg_deg=4.0, seed=0)
+    g2 = generators.community(150, n_comm=3, avg_deg=4.0, seed=1)
+    queries = [PathQuery.coerce(q)
+               for q in generators.random_queries(g, 4, (3, 3), seed=2)]
+    (s, t, k), (s2, t2, k2) = queries[0], queries[1]
+    engine = BatchPathEngine(g, EngineConfig(min_cap=32))
+    return dict(
+        BatchPathEngine=BatchPathEngine, EngineConfig=EngineConfig,
+        GraphDelta=GraphDelta, PathQuery=PathQuery, PathSession=PathSession,
+        Planner=Planner, generators=generators,
+        graph=g, g=g, new_graph=g2, queries=queries, engine=engine,
+        s=s, t=t, k=k, s2=s2, t2=t2, k2=k2,
+        u=1, v=2, x=3, y=4,
+    )
+
+
+def check_file(path: Path, prelude: dict, tmpdir: str) -> list[str]:
+    failures = []
+    for lineno, info, src in extract_blocks(path):
+        if info[0] != "python":
+            continue
+        where = f"{path.relative_to(ROOT)}:{lineno}"
+        try:
+            code = compile(src, where, "exec")
+        except SyntaxError:
+            failures.append(f"{where}: syntax error\n{traceback.format_exc()}")
+            continue
+        if "norun" in info[1:]:
+            print(f"  {where}: syntax ok (norun)")
+            continue
+        ns = dict(prelude)
+        cwd = os.getcwd()
+        try:
+            os.chdir(tmpdir)
+            with contextlib.redirect_stdout(io.StringIO()):
+                exec(code, ns)
+            print(f"  {where}: ran ok")
+        except Exception:
+            failures.append(f"{where}: execution failed\n"
+                            f"{traceback.format_exc()}\n--- snippet ---\n"
+                            f"{src}\n---------------")
+        finally:
+            os.chdir(cwd)
+    return failures
+
+
+def main(argv: list[str]) -> int:
+    if argv:
+        files = [ROOT / a for a in argv]
+    else:
+        files = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+    files = [f for f in files if f.exists()]
+    prelude = build_prelude()
+    failures: list[str] = []
+    with tempfile.TemporaryDirectory(prefix="docsnippets.") as tmpdir:
+        for f in files:
+            print(f"{f.relative_to(ROOT)}:")
+            failures += check_file(f, prelude, tmpdir)
+    if failures:
+        print(f"\n{len(failures)} doc snippet(s) FAILED:\n", file=sys.stderr)
+        for msg in failures:
+            print(msg, file=sys.stderr)
+        return 1
+    print("\nall doc snippets ok")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

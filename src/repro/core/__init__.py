@@ -3,7 +3,7 @@ from .graph import Graph, DeviceGraph
 from .delta import GraphDelta, AppliedDelta
 from .cache import SharedPathCache
 from .query import (PathQuery, QueryResult, BatchReport, Planner, Output,
-                    QueryLike)
+                    QueryLike, ResultStatus)
 from .engine import BatchPathEngine, EngineConfig, EngineOverflow, BatchResult
 from .planner import CostEstimate, CostRouter, Route, RouterConfig
 from .session import PathSession
@@ -16,7 +16,8 @@ __all__ = ["Graph", "DeviceGraph", "GraphDelta", "AppliedDelta",
            "BatchPathEngine", "EngineConfig",
            "EngineOverflow", "BatchResult", "SharedPathCache",
            "PathQuery", "QueryResult", "BatchReport", "Planner", "Output",
-           "QueryLike", "PathSession", "CompileLog", "ShardedExecutor",
+           "QueryLike", "ResultStatus", "PathSession", "CompileLog",
+           "ShardedExecutor",
            "CostEstimate", "CostRouter", "Route", "RouterConfig",
            "build_index", "QueryIndex", "compilelog", "distributed",
            "generators", "oracle", "planner"]

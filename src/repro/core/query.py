@@ -32,7 +32,7 @@ from .pathset import PathSet
 from ..obs import trace as obstrace
 
 __all__ = ["Output", "Planner", "PathQuery", "QueryResult", "BatchReport",
-           "PathsStore", "QueryLike", "midpoint_split"]
+           "PathsStore", "QueryLike", "ResultStatus", "midpoint_split"]
 
 
 def midpoint_split(k: int) -> tuple[int, int]:
@@ -109,6 +109,15 @@ class PathQuery:
     either way the engine stops working once the cap is reached.
     Iterating a PathQuery yields ``(s, t, k)``, so legacy unpacking code
     keeps working.
+
+    ``deadline_s`` and ``tenant`` are the serving-side SLO contract
+    (ignored by one-shot batch runs): ``deadline_s`` is the per-query
+    latency budget in seconds *from submission* — the streaming admission
+    loop admits a micro-batch early when the oldest waiter's slack is
+    spent, sheds queries whose deadline already passed, and counts misses
+    in ``serve_deadline_miss_total``. ``tenant`` names the submitting
+    tenant for weighted-fair admission ordering and per-tenant wait
+    histograms (see ``docs/serving.md`` § SLO-aware admission).
     """
 
     s: int
@@ -116,6 +125,8 @@ class PathQuery:
     k: int
     limit: Optional[int] = None
     output: Output = Output.PATHS
+    deadline_s: Optional[float] = None
+    tenant: str = "default"
 
     def __post_init__(self):
         object.__setattr__(self, "s", int(self.s))
@@ -124,6 +135,9 @@ class PathQuery:
         object.__setattr__(self, "output", Output.coerce(self.output))
         if self.limit is not None:
             object.__setattr__(self, "limit", int(self.limit))
+        if self.deadline_s is not None:
+            object.__setattr__(self, "deadline_s", float(self.deadline_s))
+        object.__setattr__(self, "tenant", str(self.tenant))
         if self.s < 0 or self.t < 0:
             raise ValueError("vertex ids must be >= 0")
         if self.s == self.t:
@@ -134,6 +148,8 @@ class PathQuery:
             raise ValueError("limit must be >= 1 (or None for unlimited)")
         if self.output is Output.EXISTS and self.limit is not None:
             raise ValueError("limit is meaningless for exists-only queries")
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError("deadline_s must be > 0 (or None for no SLO)")
 
     @classmethod
     def coerce(cls, query: "QueryLike") -> "PathQuery":
@@ -166,6 +182,21 @@ class PathQuery:
 
 
 QueryLike = Union[PathQuery, tuple[int, int, int], Sequence[int]]
+
+
+class ResultStatus(enum.Enum):
+    """Terminal outcome of one query: answered, or shed by admission.
+
+    A ``SHED`` result is a first-class answer, not an exception path — a
+    continuous server must be able to refuse work under pressure without
+    tearing down the stream, and the caller must be able to tell "no
+    paths" from "not attempted". Shed results carry no data: ``.paths`` /
+    ``.count`` / ``.exists`` raise, ``.shed_reason`` says why
+    (``"overload"`` | ``"deadline"``).
+    """
+
+    OK = "ok"
+    SHED = "shed"
 
 
 class PathsStore:
@@ -224,10 +255,32 @@ class QueryResult:
     _store: Optional[PathsStore] = None
     _count: Optional[int] = None
     _exists: Optional[bool] = None
+    status: ResultStatus = ResultStatus.OK
+    shed_reason: Optional[str] = None   # "overload" | "deadline" when SHED
+
+    @classmethod
+    def shed(cls, query: PathQuery, reason: str) -> "QueryResult":
+        """A typed rejection: admission refused this query (see
+        :class:`ResultStatus`). Accessors raise; ``.ok`` is False."""
+        return cls(query=query, status=ResultStatus.SHED,
+                   shed_reason=reason)
+
+    @property
+    def ok(self) -> bool:
+        """False when admission shed the query instead of answering it."""
+        return self.status is ResultStatus.OK
+
+    def _check_shed(self) -> None:
+        if self.status is ResultStatus.SHED:
+            raise ValueError(
+                f"query {self.query.key} was shed by admission "
+                f"(reason: {self.shed_reason}); no result was computed — "
+                f"check .status before reading data")
 
     @property
     def paths(self) -> np.ndarray:
         """(n_paths, k+1) int32 matrix (pad -1); materialized on demand."""
+        self._check_shed()
         if self._store is None:
             raise ValueError(
                 f"{self.query.output.value}-only query assembled no "
@@ -237,6 +290,7 @@ class QueryResult:
     @property
     def count(self) -> int:
         """Number of result paths — no host matrix transfer needed."""
+        self._check_shed()
         if self._count is None:
             if self._store is None:
                 raise ValueError(
@@ -248,6 +302,7 @@ class QueryResult:
     @property
     def exists(self) -> bool:
         """Whether at least one HC-s-t simple path exists."""
+        self._check_shed()
         if self._exists is None:
             self._exists = self.count > 0
         return self._exists
@@ -265,6 +320,9 @@ class QueryResult:
 
     def __repr__(self) -> str:  # never forces a host matrix transfer
         q = self.query
+        if self.status is ResultStatus.SHED:
+            return (f"QueryResult({q.s}->{q.t}, k={q.k}, SHED "
+                    f"({self.shed_reason}))")
         if self._count is None and self._store is None:
             what = f"exists={self._exists}"
             mat = ""

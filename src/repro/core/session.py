@@ -64,7 +64,14 @@ class PathSession:
         the Chrome-trace JSON. Ignored when wrapping an existing engine;
         None defers to the config.
     n_groups / policy / gamma / warm_bias_eps : streaming-server knobs,
-        applied when the first query is submitted.
+        applied when the first query is submitted. ``policy`` is an
+        :class:`~repro.launch.serve.AdmissionPolicy` — including the SLO
+        layer (per-query deadlines via ``PathQuery.deadline_s``,
+        ``max_queue`` load shedding, ``tenant_weights`` fairness; see
+        ``docs/serving.md`` § SLO-aware admission).
+    clock : the streaming server's notion of "now" (callable returning
+        seconds) — defaults to ``time.monotonic``; pass a
+        :class:`~repro.launch.serve.VirtualClock` for open-loop replay.
     """
 
     def __init__(self, graph: Graph | BatchPathEngine,
@@ -76,7 +83,8 @@ class PathSession:
                  trace: Optional[bool] = None,
                  n_groups: int = 2, policy=None,
                  gamma: Optional[float] = None,
-                 warm_bias_eps: float = 0.08):
+                 warm_bias_eps: float = 0.08,
+                 clock=None):
         if isinstance(graph, BatchPathEngine):
             self.engine = graph
         else:
@@ -94,7 +102,7 @@ class PathSession:
         self._server = None
         self._server_kw = dict(n_groups=n_groups, policy=policy,
                                gamma=gamma, warm_bias_eps=warm_bias_eps,
-                               planner=self.planner)
+                               planner=self.planner, clock=clock)
 
     # -- one-shot batch ------------------------------------------------
     def run(self, queries: Sequence[QueryLike],

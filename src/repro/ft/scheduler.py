@@ -35,6 +35,8 @@ class WorkStealingScheduler:
         self.in_flight: dict[int, _Item] = {}
         self._inflight_group: dict[int, int] = {}   # cluster_id -> group
         self.steals = 0
+        self.failovers = 0          # group failures absorbed (fail_group calls)
+        self.requeued = 0           # in-flight items returned to a queue
         self._next_id = 0
         self._lock = threading.Lock()
 
@@ -96,16 +98,36 @@ class WorkStealingScheduler:
             self._inflight_group.pop(cluster_id, None)
             self.done[cluster_id] = result
 
-    def fail_group(self, group: int, lost_cluster_ids: list[int]) -> None:
-        """A replica group died: its in-flight clusters go back to the queue."""
+    def fail_group(self, group: int,
+                   lost_cluster_ids: Optional[list[int]] = None) -> list[int]:
+        """A replica group died: its in-flight clusters go back to the queue.
+
+        ``lost_cluster_ids`` defaults to every cluster currently in flight
+        on ``group`` (the scheduler tracks that mapping, so callers don't
+        have to). Requeued items land on the least-loaded *surviving*
+        queue — never back on the failed group, whose queue would only
+        drain through steals. Returns the requeued cluster ids; already-
+        completed clusters are not re-run (at-least-once, idempotent by
+        query id downstream).
+        """
         with self._lock:
+            self.failovers += 1
+            if lost_cluster_ids is None:
+                lost_cluster_ids = [cid for cid, g in
+                                    self._inflight_group.items() if g == group]
+            survivors = [g for g in range(self.n_groups) if g != group] \
+                or [group]
+            requeued = []
             for cid in lost_cluster_ids:
                 it = self.in_flight.pop(cid, None)
                 self._inflight_group.pop(cid, None)
                 if it is not None and cid not in self.done:
-                    target = min(range(self.n_groups),
+                    target = min(survivors,
                                  key=lambda g: sum(i.cost for i in self.queues[g]))
                     self.queues[target].append(it)
+                    requeued.append(cid)
+            self.requeued += len(requeued)
+            return requeued
 
     def pending(self) -> int:
         with self._lock:

@@ -12,48 +12,141 @@ to replica groups through the work-stealing scheduler, and the engine
 executes them consulting the cache before materializing any Ψ node.
 Per-batch latency, sharing and cache hit/miss stats are logged; a result
 sample is validated against the oracle.
+
+The admission layer is SLO-aware (``docs/serving.md`` § SLO-aware
+admission): per-query deadlines (``PathQuery.deadline_s``) cut a
+micro-batch early when the oldest waiter's slack is spent, admission
+ordering is weighted-fair across tenants, and under pressure
+(``AdmissionPolicy.max_queue``) exists/count queries are answered through
+the cost-router fast path while path queries are shed with a typed
+:class:`~repro.core.query.ResultStatus.SHED` result. Replica-group
+failures mid-batch are absorbed by the work-stealing scheduler's
+checkpointable queue: the failed group's in-flight cluster is requeued
+onto survivors (at-least-once; results land exactly once per query id).
 """
 from __future__ import annotations
 
 import argparse
 import copy
 import dataclasses
+import math
 import time
-from typing import Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
 from ..core import BatchPathEngine, EngineConfig, build_index
 from ..core import generators
 from ..core.planner import admission_fast_path
-from ..core.query import PathQuery, Planner, QueryLike, QueryResult
+from ..core.query import (Output, PathQuery, Planner, QueryLike, QueryResult)
 from ..core.clustering import cluster_queries
 from ..core.similarity import similarity_matrix
 from ..ft.scheduler import WorkStealingScheduler
 from ..obs import metrics as obsmetrics
 
-__all__ = ["AdmissionPolicy", "StreamingServer", "serve_batch",
-           "warm_cluster_bias"]
+__all__ = ["AdmissionPolicy", "StreamingServer", "GroupFailure",
+           "VirtualClock", "serve_batch", "warm_cluster_bias"]
+
+
+class GroupFailure(RuntimeError):
+    """A replica group died while executing a scheduler item.
+
+    Raised by a failure injector (tests, exp11's mid-stream kill) or by
+    wrapping real executor errors; the serving loop catches it, marks the
+    group dead, requeues the in-flight cluster via
+    :meth:`WorkStealingScheduler.fail_group`, and carries on with the
+    survivors.
+    """
+
+    def __init__(self, group: int, msg: str = ""):
+        super().__init__(msg or f"replica group {group} failed")
+        self.group = group
+
+
+class VirtualClock:
+    """A settable monotonic clock for open-loop replay (exp11).
+
+    The streaming server reads its notion of "now" through a callable; a
+    ``VirtualClock`` lets a benchmark drive arrivals in simulated time
+    while still charging real execution walls — the server calls
+    ``advance(wall_s)`` after each admitted batch, so queueing delay under
+    load accumulates exactly as it would against a wall clock, without the
+    replay having to sleep through idle gaps.
+    """
+
+    def __init__(self, t0: float = 0.0):
+        self.t = float(t0)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += float(dt)
 
 
 @dataclasses.dataclass
 class AdmissionPolicy:
-    """When to close the open micro-batch and admit it to the engine."""
+    """When to close the open micro-batch — and what to refuse.
+
+    The first three fields are the classic size/delay cutoffs. The SLO
+    layer on top of them:
+
+    * ``max_queue`` — admission control: when this many queries already
+      wait, a new exists/count submission is answered immediately through
+      the cost-router fast path (cheap by construction) and a new paths
+      submission is **shed** with a typed
+      :class:`~repro.core.query.ResultStatus.SHED` result instead of
+      joining a queue it would time out of. ``None`` disables shedding.
+    * ``shed_expired`` — a query whose deadline has already passed at
+      admission time is shed (reason ``"deadline"``) rather than executed:
+      the work is wasted either way, and skipping it protects the queries
+      that can still meet their SLO.
+    * ``tenant_weights`` — weighted-fair admission ordering: queries are
+      admitted in decreasing ``wait × weight(tenant)`` order (unknown
+      tenants weigh 1.0), with deadline urgency taking precedence — see
+      :meth:`order_key`.
+
+    Deadline slack additionally *cuts the batch early*: ``due`` fires as
+    soon as the oldest waiter's remaining slack (deadline − now − expected
+    service time) is spent, regardless of ``min_batch``/``max_delay_s`` —
+    deadlines take precedence over coalescing.
+    """
 
     max_batch: int = 32         # admit as soon as this many queries wait
     max_delay_s: float = 0.02   # ... or the oldest has waited this long
     min_batch: int = 1          # never admit fewer, unless the deadline
     # has passed (the deadline overrides min_batch: a lone query older
     # than max_delay_s must not starve until drain())
+    max_queue: Optional[int] = None     # waiting cap; beyond it, shed
+    shed_expired: bool = True           # shed already-expired deadlines
+    tenant_weights: Optional[dict] = None   # tenant -> weight (default 1.0)
 
-    def due(self, n_waiting: int, oldest_wait_s: float) -> bool:
+    def due(self, n_waiting: int, oldest_wait_s: float,
+            min_slack_s: Optional[float] = None) -> bool:
         if n_waiting <= 0:
             return False
+        if min_slack_s is not None and min_slack_s <= 0:
+            return True     # a waiter's SLO slack is spent: cut the batch now
         if oldest_wait_s >= self.max_delay_s:
             return True
         if n_waiting < self.min_batch:
             return False
         return n_waiting >= self.max_batch
+
+    def weight(self, tenant: str) -> float:
+        return (self.tenant_weights or {}).get(tenant, 1.0)
+
+    def order_key(self, query: PathQuery, wait_s: float,
+                  deadline: Optional[float]):
+        """Admission-order sort key (ascending = admitted first).
+
+        Deadline queries come first, earliest absolute deadline first
+        (EDF); within the no-deadline tail, decreasing weighted wait —
+        so a tenant with weight 2 drains twice as fast as weight 1 under
+        contention, and nobody starves (wait grows without bound).
+        """
+        return (deadline if deadline is not None else math.inf,
+                -wait_s * self.weight(query.tenant))
 
 
 def warm_cluster_bias(engine: BatchPathEngine, queries: Sequence[QueryLike],
@@ -89,6 +182,23 @@ def warm_cluster_bias(engine: BatchPathEngine, queries: Sequence[QueryLike],
     return bias if bias.any() else None
 
 
+@dataclasses.dataclass
+class _Waiting:
+    """One enqueued query: id, query, arrival time, absolute deadline."""
+
+    qid: int
+    query: PathQuery
+    arrival: float
+    deadline: Optional[float]   # arrival + query.deadline_s, or None
+
+
+def _tenant_counts(queries: Sequence[PathQuery]) -> dict[str, int]:
+    out: dict[str, int] = {}
+    for q in queries:
+        out[q.tenant] = out.get(q.tenant, 0) + 1
+    return out
+
+
 class StreamingServer:
     """Continuous admission loop over a shared engine + scheduler.
 
@@ -114,7 +224,8 @@ class StreamingServer:
                  gamma: Optional[float] = None,
                  policy: Optional[AdmissionPolicy] = None,
                  warm_bias_eps: float = 0.08,
-                 planner: Planner | str = Planner.BATCH):
+                 planner: Planner | str = Planner.BATCH,
+                 clock: Optional[Callable[[], float]] = None):
         self.engine = engine
         self.n_groups = n_groups
         self.gamma = engine.cfg.gamma if gamma is None else gamma
@@ -125,16 +236,47 @@ class StreamingServer:
         # immediately instead of waiting out micro-batch coalescing)
         self.planner = Planner.coerce(planner)
         self.n_fast_path = 0
+        self.n_shed = 0
+        self.n_deadline_miss = 0
+        # the serving notion of "now": a wall clock by default, or a
+        # VirtualClock for open-loop replay (advanced by real batch walls)
+        self.clock = clock or time.monotonic
+        # failure injection + failover state: a GroupFailure raised while
+        # a group executes its item marks the group dead and requeues the
+        # item via the scheduler's checkpointable queue (at-least-once)
+        self.fail_injector: Optional[Callable] = None   # (group, item) -> None
+        self.dead_groups: set[int] = set()
+        self.n_failovers = 0
         self.sched = WorkStealingScheduler(
             n_groups, cost_fn=lambda qs: float(len(qs)) ** 1.5)
         self.results: dict[int, QueryResult] = {}
         self.batch_log: list[dict] = []
         self.delta_log: list[dict] = []             # per-delta engine reports
-        self._waiting: list[tuple[int, PathQuery, float]] = []
+        self._waiting: list[_Waiting] = []
         self._query_of: dict[int, PathQuery] = {}   # qid -> query
         self._pending_deltas: list = []             # applied at batch boundary
         self._delta_mark = 0       # delta_log watermark of the last batch
+        self._shed_mark = 0        # n_shed watermark of the last batch
         self._next_qid = 0
+        self._service_ewma = 0.0   # smoothed batch wall, for slack estimates
+
+    def _now(self) -> float:
+        return self.clock()
+
+    def _advance(self, dt: float, n_queries: int = 1) -> None:
+        """Charge execution to a virtual clock (no-op on a real clock,
+        whose reading already includes it). A clock exposing
+        ``advance_batch(dt, n_queries)`` gets the dispatch size too — how
+        exp11's deterministic service-cost model charges ``c0 + c1*Q``
+        instead of the (noisy) real wall; a plain :class:`VirtualClock`
+        is charged the real wall via ``advance(dt)``."""
+        advance_batch = getattr(self.clock, "advance_batch", None)
+        if advance_batch is not None:
+            advance_batch(dt, n_queries)
+            return
+        advance = getattr(self.clock, "advance", None)
+        if advance is not None:
+            advance(dt)
 
     # -- ingress -------------------------------------------------------
     def submit(self, query: QueryLike, now: Optional[float] = None) -> int:
@@ -150,24 +292,59 @@ class StreamingServer:
         delta (the same boundary semantics an admitted batch would see —
         queued-but-unflushed deltas apply at the *next* batch boundary,
         which this fast path never waits for).
+
+        Under pressure (``AdmissionPolicy.max_queue`` queries already
+        waiting), load shedding kicks in: exists/count queries are
+        answered immediately through the cost-router fast path (they
+        never touch the queue), and paths queries are **shed** — the
+        result is a typed ``ResultStatus.SHED`` ``QueryResult`` (reason
+        ``"overload"``), delivered through ``results``/``take`` like any
+        answer, and counted in ``serve_shed_total``.
         """
         q = PathQuery.coerce(query).check_bounds(self.engine.g.n)
         qid = self._next_qid
         self._next_qid += 1
         self._query_of[qid] = q
+        reg = obsmetrics.registry()
         if self.planner is Planner.AUTO and admission_fast_path(q):
-            reg = obsmetrics.registry()
             reg.counter("serve_fast_path_total").inc()
-            with self.engine.obs.span("serve.fast_path"):
-                r = self.engine.run([q], planner=Planner.AUTO)
-            self.results[qid] = r[0].offload()
             self.n_fast_path += 1
-            reg.histogram("serve_admission_wait_s").record(0.0)
-            reg.histogram("serve_query_e2e_s").record(
-                r.stats.get("t_wall_s", 0.0))
-            return qid
-        self._waiting.append((qid, q,
-                              time.monotonic() if now is None else now))
+            return self._run_fast_path(qid, q)
+        pol = self.policy
+        if pol.max_queue is not None and len(self._waiting) >= pol.max_queue:
+            if q.output in (Output.EXISTS, Output.COUNT):
+                # pressure relief: cheap outputs take the direct routed
+                # plan now instead of deepening the queue they'd time out of
+                reg.counter("serve_pressure_fast_path_total").inc()
+                return self._run_fast_path(qid, q)
+            return self._shed(qid, q, "overload")
+        arrival = self._now() if now is None else now
+        deadline = None if q.deadline_s is None else arrival + q.deadline_s
+        self._waiting.append(_Waiting(qid, q, arrival, deadline))
+        return qid
+
+    def _run_fast_path(self, qid: int, q: PathQuery) -> int:
+        """Answer one query immediately (no coalescing) via Planner.AUTO
+        routing; charges its wall to a virtual clock like a batch."""
+        reg = obsmetrics.registry()
+        with self.engine.obs.span("serve.fast_path") as sfp:
+            r = self.engine.run([q], planner=Planner.AUTO)
+        self.results[qid] = r[0].offload()
+        self._advance(sfp.duration, 1)
+        e2e = r.stats.get("t_wall_s", 0.0)
+        reg.histogram("serve_admission_wait_s").record(0.0)
+        reg.histogram("serve_admission_wait_s", tenant=q.tenant).record(0.0)
+        reg.histogram("serve_query_e2e_s").record(e2e)
+        if q.deadline_s is not None and e2e > q.deadline_s:
+            self.n_deadline_miss += 1
+            reg.counter("serve_deadline_miss_total").inc()
+        return qid
+
+    def _shed(self, qid: int, q: PathQuery, reason: str) -> int:
+        self.results[qid] = QueryResult.shed(q, reason)
+        self.n_shed += 1
+        obsmetrics.registry().counter("serve_shed_total",
+                                      reason=reason).inc()
         return qid
 
     def apply_delta(self, delta) -> None:
@@ -217,17 +394,34 @@ class StreamingServer:
     def pump(self, now: Optional[float] = None) -> bool:
         """Admit every micro-batch the policy says is due (a burst can
         leave several deadline-expired batches queued at once). Queued
-        graph deltas are applied first — a batch boundary by definition."""
+        graph deltas are applied first — a batch boundary by definition.
+
+        "Now" is re-read from the clock every iteration (an admitted
+        batch advances a virtual clock by its execution wall), so later
+        batches in a burst see the time earlier ones consumed.
+        """
         self.flush_deltas()
         admitted = False
-        now = time.monotonic() if now is None else now
         while self._waiting:
-            oldest = now - min(arr for _, _, arr in self._waiting)
-            if not self.policy.due(len(self._waiting), oldest):
+            t = self._now() if now is None else now
+            now = None      # only the first iteration honors the override
+            oldest = t - min(w.arrival for w in self._waiting)
+            if not self.policy.due(len(self._waiting), oldest,
+                                   self._min_slack(t)):
                 break
             self._admit()
             admitted = True
         return admitted
+
+    def _min_slack(self, now: float) -> Optional[float]:
+        """Tightest remaining SLO slack over the waiting queue: absolute
+        deadline minus now minus the expected service wall (EWMA of recent
+        batch walls). None when nothing waiting carries a deadline."""
+        deadlines = [w.deadline for w in self._waiting
+                     if w.deadline is not None]
+        if not deadlines:
+            return None
+        return min(deadlines) - now - self._service_ewma
 
     def drain(self) -> None:
         """Flush: admit everything still waiting, policy notwithstanding."""
@@ -245,25 +439,71 @@ class StreamingServer:
         self._query_of.pop(qid, None)
         return out
 
+    # -- failover ------------------------------------------------------
+    def _fail_group(self, group: int) -> None:
+        self.dead_groups.add(group)
+        self.n_failovers += 1
+        # the scheduler requeues every cluster in flight on the failed
+        # group onto the least-loaded survivor (checkpointable queue —
+        # the same path WorkStealingScheduler.restore takes after a
+        # process crash); items carry global qids, so a requeue from any
+        # earlier micro-batch still resolves to the right queries
+        self.sched.fail_group(group)
+        obsmetrics.registry().counter("serve_failover_total").inc()
+
+    def kill_group(self, group: int) -> None:
+        """Declare a replica group dead between batches (exp11 uses the
+        ``fail_injector`` hook to kill one *mid-batch* instead). Its
+        queued/in-flight clusters are requeued onto the survivors."""
+        if group in self.dead_groups:
+            return
+        self._fail_group(group)
+
+    def revive_group(self, group: int) -> None:
+        """Bring a dead group back (a replacement replica joined). The
+        engine-side cache state was never lost — replicas share the
+        engine, so a revived group starts warm."""
+        self.dead_groups.discard(group)
+
     # -- one micro-batch -----------------------------------------------
     def _admit(self) -> None:
         self.flush_deltas()   # an admission IS a micro-batch boundary
         deltas = self.delta_log[self._delta_mark:]
         self._delta_mark = len(self.delta_log)
+        t_admit = self._now()
+        reg = obsmetrics.registry()
+        # deadline-expired waiters are shed before ordering: executing
+        # them cannot meet their SLO and only steals slack from queries
+        # that still can (AdmissionPolicy.shed_expired disables this)
+        if self.policy.shed_expired:
+            keep = []
+            for w in self._waiting:
+                if w.deadline is not None and t_admit > w.deadline:
+                    self._shed(w.qid, w.query, "deadline")
+                else:
+                    keep.append(w)
+            self._waiting = keep
+            if not self._waiting:
+                return
+        # weighted-fair, deadline-first admission order (policy.order_key)
+        self._waiting.sort(key=lambda w: self.policy.order_key(
+            w.query, t_admit - w.arrival, w.deadline))
         batch = self._waiting[:self.policy.max_batch]
         self._waiting = self._waiting[self.policy.max_batch:]
-        qids = [qid for qid, _, _ in batch]
-        queries = [q for _, q, _ in batch]
+        qids = [w.qid for w in batch]
+        queries = [w.query for w in batch]
         # admission wait: submit -> this batch boundary, per query
-        t_admit = time.monotonic()
-        waits = [t_admit - arr for _, _, arr in batch]
-        reg = obsmetrics.registry()
+        waits = [t_admit - w.arrival for w in batch]
         h_wait = reg.histogram("serve_admission_wait_s")
-        for w in waits:
+        for w, entry in zip(waits, batch):
             h_wait.record(w)
+            reg.histogram("serve_admission_wait_s",
+                          tenant=entry.query.tenant).record(w)
         with self.engine.obs.span("serve.batch",
                                   n_queries=len(batch)) as sb:
             steals_before = self.sched.steals
+            failovers_before = self.sched.failovers
+            requeued_before = self.sched.requeued
             with self.engine.obs.span("serve.assemble",
                                       n_queries=len(batch)) as sasm:
                 index = build_index(
@@ -314,16 +554,31 @@ class StreamingServer:
                 while open_cids:
                     progressed = False
                     for grp in range(self.n_groups):
+                        if grp in self.dead_groups:
+                            continue
                         item = self.sched.next_for(grp)
                         if item is None:
                             continue
                         progressed = True
-                        sub = [self._query_of[qid] for qid in item.queries]
-                        # the item IS one cluster — pass it through so the
-                        # engine keeps our (cache-aware) grouping instead
-                        # of re-clustering
-                        r = self.engine.run(sub, planner=self.planner,
-                                            clusters=[list(range(len(sub)))])
+                        try:
+                            if self.fail_injector is not None:
+                                self.fail_injector(grp, item)
+                            sub = [self._query_of[qid]
+                                   for qid in item.queries]
+                            # the item IS one cluster — pass it through so
+                            # the engine keeps our (cache-aware) grouping
+                            # instead of re-clustering
+                            r = self.engine.run(
+                                sub, planner=self.planner,
+                                clusters=[list(range(len(sub)))])
+                        except GroupFailure:
+                            # the group died mid-item: mark it dead and
+                            # requeue its in-flight cluster onto the
+                            # survivors (at-least-once — a result written
+                            # before the crash would simply be overwritten
+                            # by the re-run, idempotent by query id)
+                            self._fail_group(grp)
+                            continue
                         for i, qid in enumerate(item.queries):
                             # results may sit untaken indefinitely —
                             # offload so the backlog holds compact host
@@ -334,21 +589,50 @@ class StreamingServer:
                             agg[key] += r.stats.get(key, 0)
                         self.sched.complete(item.cluster_id, True)
                         open_cids.discard(item.cluster_id)
-                    if not progressed and not any(
-                            cid in self.sched.in_flight for cid in open_cids):
-                        break   # nothing runnable (foreign in-flight only)
+                    if not progressed:
+                        if open_cids and len(self.dead_groups) \
+                                >= self.n_groups:
+                            raise RuntimeError(
+                                f"all {self.n_groups} replica groups are "
+                                f"dead with {len(open_cids)} cluster(s) "
+                                f"unserved; revive_group() one first")
+                        if not any(cid in self.sched.in_flight
+                                   for cid in open_cids):
+                            break   # nothing runnable (foreign in-flight)
         wall = sb.duration
+        # a virtual clock is charged the real execution wall here, so the
+        # e2e readout below sees queueing + service on one timeline
+        self._advance(wall, len(batch))
         # end-to-end latency: submit -> results resident, per query
-        t_done = time.monotonic()
-        e2e = [t_done - arr for _, _, arr in batch]
+        t_done = self._now()
+        # the slack estimator must live on the SAME clock deadlines do:
+        # under a virtual clock the charged (model) time is the service
+        # cost, and on a real clock t_done - t_admit is the batch wall
+        svc = t_done - t_admit
+        self._service_ewma = (svc if self._service_ewma == 0.0
+                              else 0.7 * self._service_ewma + 0.3 * svc)
+        e2e = [t_done - w.arrival for w in batch]
         h_e2e = reg.histogram("serve_query_e2e_s")
-        for v in e2e:
+        n_miss = 0
+        for v, entry in zip(e2e, batch):
             h_e2e.record(v)
+            if entry.deadline is not None and t_done > entry.deadline:
+                n_miss += 1
+        if n_miss:
+            self.n_deadline_miss += n_miss
+            reg.counter("serve_deadline_miss_total").inc(n_miss)
         Q = len(queries)
         self.batch_log.append({
             "wall_s": wall, "n_queries": Q, "n_clusters": len(clusters),
             "kernel_backend": self.engine.kernel_backend.value,
             "steals": self.sched.steals - steals_before,
+            "failovers": self.sched.failovers - failovers_before,
+            "requeued": self.sched.requeued - requeued_before,
+            "n_deadline_miss": n_miss,
+            # sheds since the previous batch boundary (submit-time
+            # overload sheds + this admission's deadline sheds)
+            "n_shed": self.n_shed - self._shed_mark,
+            "tenants": _tenant_counts(queries),
             "warm_biased": bias is not None,
             # micro-batch assembly (index + similarity + clustering) and
             # the per-query latency shape of this admission window
@@ -377,6 +661,7 @@ class StreamingServer:
             **({"cache": self.engine.cache.info()}
                if self.engine.cache is not None else {}),
         })
+        self._shed_mark = self.n_shed
 
 
 def serve_batch(engine: BatchPathEngine, queries, n_groups: int = 2,

@@ -191,6 +191,15 @@ class MetricsRegistry:
     def histogram(self, name: str, **labels) -> Histogram:
         return self._get("histogram", Histogram, name, labels)
 
+    def collect(self, name: str) -> dict[tuple, object]:
+        """Every instrument registered under ``name``, keyed by its label
+        tuple (``(("tenant", "gold"),)`` → instrument). How a readout
+        walks one metric family across label values — e.g. the per-tenant
+        ``serve_admission_wait_s`` histograms — without knowing the label
+        set up front."""
+        return {key[2]: m for key, m in list(self._metrics.items())
+                if key[1] == name}
+
     # -- snapshot / since (the compilelog pattern) ----------------------
     def snapshot(self) -> dict:
         """Immutable copy of all instrument states, for later ``since``."""

@@ -1,0 +1,283 @@
+"""SLO-aware admission + failover serving edge cases (launch.serve).
+
+Covers: the typed SHED QueryResult contract, deadline-vs-shed interaction
+(expired waiters shed at admission, urgent slack cuts batches early),
+overload shedding with the exists/count pressure fast path, weighted-fair
+tenant ordering, the VirtualClock / advance_batch charging protocol, and
+mid-batch replica-group failure (requeue on survivors, results exactly
+once per query id, cache survival, revive).
+"""
+import math
+
+import pytest
+
+from repro.core import (BatchPathEngine, EngineConfig, PathQuery,
+                        generators)
+from repro.core.query import QueryResult, ResultStatus
+from repro.launch.serve import (AdmissionPolicy, GroupFailure,
+                                StreamingServer, VirtualClock)
+
+
+def _graph(n=300):
+    return generators.community(n, n_comm=3, avg_deg=5.0, seed=0)
+
+
+def _engine(g=None, **kw):
+    return BatchPathEngine(g or _graph(), EngineConfig(min_cap=64, **kw))
+
+
+def _queries(g, n, seed=1, k=(3, 4)):
+    return [PathQuery.coerce(q)
+            for q in generators.random_queries(g, n, k, seed=seed)]
+
+
+# -- PathQuery SLO fields ------------------------------------------------
+
+def test_deadline_and_tenant_fields_validate():
+    q = PathQuery(0, 1, 3, deadline_s=0.5, tenant="gold")
+    assert q.deadline_s == 0.5 and q.tenant == "gold"
+    with pytest.raises(ValueError):
+        PathQuery(0, 1, 3, deadline_s=0.0)
+    with pytest.raises(ValueError):
+        PathQuery(0, 1, 3, deadline_s=-1.0)
+
+
+# -- shed result contract ------------------------------------------------
+
+def test_shed_result_contract():
+    q = PathQuery(0, 1, 3)
+    r = QueryResult.shed(q, "overload")
+    assert r.status is ResultStatus.SHED
+    assert not r.ok
+    assert r.shed_reason == "overload"
+    # data accessors must fail loudly, naming the query and reason
+    for accessor in ("paths", "count", "exists"):
+        with pytest.raises(ValueError, match="overload"):
+            getattr(r, accessor)
+    assert "SHED" in repr(r)
+
+
+def test_ok_result_is_ok():
+    g = _graph()
+    eng = _engine(g)
+    r = eng.run(_queries(g, 1))[0]
+    assert r.ok and r.status is ResultStatus.OK and r.shed_reason is None
+
+
+# -- overload shedding + pressure fast path ------------------------------
+
+def test_overload_sheds_paths_and_fast_paths_cheap_outputs():
+    g = _graph()
+    srv = StreamingServer(_engine(g), policy=AdmissionPolicy(
+        max_batch=8, max_delay_s=math.inf, min_batch=64, max_queue=2))
+    qs = _queries(g, 5)
+    srv.submit(qs[0])
+    srv.submit(qs[1])
+    # queue is at max_queue: a paths query is shed with a typed result...
+    qid_shed = srv.submit(qs[2])
+    assert srv.results[qid_shed].status is ResultStatus.SHED
+    assert srv.results[qid_shed].shed_reason == "overload"
+    # ...but exists/count answer immediately through the fast path
+    q3, q4 = qs[3], qs[4]
+    qid_e = srv.submit(PathQuery(q3.s, q3.t, q3.k, output="exists"))
+    qid_c = srv.submit(PathQuery(q4.s, q4.t, q4.k, output="count"))
+    for qid in (qid_e, qid_c):
+        assert qid in srv.results and srv.results[qid].ok
+    assert srv.n_shed == 1
+    srv.drain()  # the two waiting queries still complete
+    assert len(srv.results) == 5
+
+
+def test_take_returns_shed_result_once():
+    g = _graph()
+    srv = StreamingServer(_engine(g), policy=AdmissionPolicy(
+        max_batch=4, min_batch=4, max_delay_s=math.inf, max_queue=0))
+    qid = srv.submit(_queries(g, 1)[0])
+    r = srv.take(qid)
+    assert r.status is ResultStatus.SHED
+    with pytest.raises(KeyError):
+        srv.take(qid)
+
+
+# -- deadlines -----------------------------------------------------------
+
+def test_expired_deadline_sheds_at_admission():
+    g = _graph()
+    clock = VirtualClock()
+    srv = StreamingServer(_engine(g), clock=clock, policy=AdmissionPolicy(
+        max_batch=8, min_batch=1, max_delay_s=10.0))
+    q = _queries(g, 2)
+    qid_dead = srv.submit(PathQuery(q[0].s, q[0].t, q[0].k, deadline_s=1.0))
+    qid_live = srv.submit(q[1])
+    clock.advance(5.0)          # deadline long gone before any admission
+    srv.drain()
+    assert srv.results[qid_dead].shed_reason == "deadline"
+    assert srv.results[qid_live].ok
+    assert srv.n_shed == 1
+
+
+def test_shed_expired_false_executes_late_queries():
+    g = _graph()
+    clock = VirtualClock()
+    srv = StreamingServer(_engine(g), clock=clock, policy=AdmissionPolicy(
+        max_batch=8, min_batch=1, max_delay_s=10.0, shed_expired=False))
+    q = _queries(g, 1)[0]
+    qid = srv.submit(PathQuery(q.s, q.t, q.k, deadline_s=1.0))
+    clock.advance(5.0)
+    srv.drain()
+    assert srv.results[qid].ok          # executed anyway...
+    assert srv.n_deadline_miss >= 1     # ...but counted as an SLO miss
+
+
+def test_spent_slack_cuts_batch_before_min_batch():
+    g = _graph()
+    clock = VirtualClock()
+    # min_batch=64 and a huge max_delay would coalesce forever; the spent
+    # deadline slack must override both and admit the lone waiter
+    srv = StreamingServer(_engine(g), clock=clock, policy=AdmissionPolicy(
+        max_batch=64, min_batch=64, max_delay_s=math.inf))
+    srv._service_ewma = 1.5     # as if recent batches took 1.5s each
+    q = _queries(g, 1)[0]
+    srv.submit(PathQuery(q.s, q.t, q.k, deadline_s=2.0))
+    assert not srv.pump()       # slack 0.5s remains: still coalescing
+    clock.advance(0.7)
+    # 1.3s to the deadline < 1.5s expected service: slack is spent, the
+    # batch is cut before min_batch/max_delay — and before expiry, so the
+    # query executes (it is not shed)
+    assert srv.pump()
+    assert len(srv.batch_log) == 1
+    assert all(r.ok for r in srv.results.values())
+
+
+def test_due_deadline_overrides_min_batch():
+    pol = AdmissionPolicy(max_batch=32, min_batch=8, max_delay_s=0.1)
+    assert not pol.due(3, 0.05)                  # under min_batch, young
+    assert pol.due(3, 0.2)                       # max_delay exceeded
+    assert pol.due(3, 0.0, min_slack_s=-0.01)    # SLO slack spent
+    assert not pol.due(3, 0.0, min_slack_s=0.5)  # slack remains: coalesce
+    assert not pol.due(0, 99.0)
+
+
+# -- tenant fairness -----------------------------------------------------
+
+def test_order_key_weighted_fairness_and_edf():
+    pol = AdmissionPolicy(tenant_weights={"gold": 4.0})
+    gold = PathQuery(0, 1, 3, tenant="gold")
+    bronze = PathQuery(0, 1, 3, tenant="bronze")
+    dl = PathQuery(0, 1, 3, tenant="bronze")
+    # deadline queries sort ahead of all no-deadline queries (EDF)
+    assert pol.order_key(dl, 0.1, 5.0) < pol.order_key(gold, 99.0, None)
+    # same wait: the weighted tenant wins
+    assert pol.order_key(gold, 1.0, None) < pol.order_key(bronze, 1.0, None)
+    # ...but a bronze that waited > weight-ratio longer wins (no starving)
+    assert pol.order_key(bronze, 5.0, None) < pol.order_key(gold, 1.0, None)
+
+
+def test_weighted_tenant_admitted_first_under_contention():
+    g = _graph()
+    clock = VirtualClock()
+    srv = StreamingServer(_engine(g), clock=clock, policy=AdmissionPolicy(
+        max_batch=4, min_batch=1, max_delay_s=0.1,
+        tenant_weights={"gold": 8.0}))
+    qs = _queries(g, 8, seed=3)
+    for i, q in enumerate(qs):      # same arrival time, alternating tenant
+        srv.submit(PathQuery(q.s, q.t, q.k,
+                             tenant="gold" if i % 2 else "bronze"))
+    clock.advance(0.2)
+    srv.pump()                      # one max_batch=4 admission is due
+    first = srv.batch_log[0]["tenants"]
+    assert first.get("gold", 0) == 4, f"gold not prioritized: {first}"
+    srv.drain()
+    assert len(srv.results) == 8    # bronze still served (no starvation)
+
+
+# -- clock protocol ------------------------------------------------------
+
+def test_virtual_clock_charges_real_wall():
+    clock = VirtualClock(5.0)
+    assert clock() == 5.0
+    clock.advance(0.25)
+    assert clock() == 5.25
+
+
+def test_advance_batch_protocol_preferred():
+    charges = []
+
+    class ModelClock(VirtualClock):
+        def advance_batch(self, dt, n_queries):
+            charges.append(n_queries)
+            self.t += 1.0
+
+    g = _graph()
+    clock = ModelClock()
+    srv = StreamingServer(_engine(g), clock=clock, policy=AdmissionPolicy(
+        max_batch=4, min_batch=1, max_delay_s=0.0))
+    for q in _queries(g, 3, seed=4):
+        srv.submit(q)
+    srv.drain()
+    assert sum(charges) == 3 and clock() >= 1.0
+    # e2e on the virtual timeline: wait + charged service, never real wall
+    assert srv.batch_log[-1]["e2e_p50_s"] >= 1.0
+
+
+# -- failover ------------------------------------------------------------
+
+def test_group_failure_requeues_and_results_land_exactly_once():
+    g = _graph()
+    eng = _engine(g, cache_bytes=32 << 20)
+    srv = StreamingServer(eng, n_groups=3, gamma=0.9,
+                          policy=AdmissionPolicy(max_batch=16, min_batch=1,
+                                                 max_delay_s=0.0))
+    state = {"n": 0}
+
+    def injector(grp, item):
+        if grp == 0:
+            state["n"] += 1
+            if state["n"] == 2:     # die executing the second item
+                raise GroupFailure(grp)
+
+    srv.fail_injector = injector
+    qids = [srv.submit(q) for q in _queries(g, 16, seed=5)]
+    srv.drain()
+    assert srv.n_failovers == 1 and 0 in srv.dead_groups
+    assert srv.sched.requeued >= 1
+    # exactly once per query id: every qid resolved, none lost, and the
+    # requeued cluster's answers are real results (idempotent re-run)
+    assert sorted(srv.results) == sorted(qids)
+    assert all(srv.results[qid].ok for qid in qids)
+    log = srv.batch_log[-1]
+    assert log["failovers"] == 1 and log["requeued"] >= 1
+    # the shared cache survived the group death
+    assert eng.cache is not None and eng.cache.info()["entries"] > 0
+
+
+def test_all_groups_dead_raises():
+    g = _graph()
+    srv = StreamingServer(_engine(g), n_groups=2,
+                          policy=AdmissionPolicy(max_batch=4, min_batch=1,
+                                                 max_delay_s=0.0))
+
+    def injector(grp, item):
+        raise GroupFailure(grp)
+
+    srv.fail_injector = injector
+    srv.submit(_queries(g, 1, seed=6)[0])
+    with pytest.raises(RuntimeError, match="dead"):
+        srv.drain()
+
+
+def test_revive_group_serves_again():
+    g = _graph()
+    srv = StreamingServer(_engine(g), n_groups=2,
+                          policy=AdmissionPolicy(max_batch=4, min_batch=1,
+                                                 max_delay_s=0.0))
+    srv.kill_group(0)
+    assert srv.n_failovers == 1
+    qs = _queries(g, 2, seed=7)
+    srv.submit(qs[0])
+    srv.drain()                     # group 1 carries the batch alone
+    srv.revive_group(0)
+    srv.submit(qs[1])
+    srv.drain()
+    assert len(srv.results) == 2
+    assert all(r.ok for r in srv.results.values())
